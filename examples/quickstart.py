@@ -1,0 +1,69 @@
+"""Quickstart: the paper's machinery in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. INT8 GEMM through the systolic-array Pallas kernel (the PU datapath).
+2. A conv layer executed as im2col + GEMM (the paper's unified dataflow).
+3. The two-phase weight-transfer scheduler hiding load stalls.
+4. One of the assigned LM architectures doing a forward + decode step.
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.core.pu import PU_2X
+from repro.core import scheduler
+from repro.core.pu import TileCost
+from repro.kernels import ops
+from repro.models import api as model_api
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # 1. INT8 GEMM with fused bias + power-of-two shift + ReLU ------------
+    w = jnp.asarray(rng.integers(-127, 128, (64, 128), dtype=np.int8))
+    x = jnp.asarray(rng.integers(-127, 128, (128, 32), dtype=np.int8))
+    bias = jnp.asarray(rng.integers(-500, 500, (64,), dtype=np.int32))
+    y = ops.int8_gemm(w, x, bias, shift=7, relu=True)
+    print(f"1. int8_gemm: {w.shape} @ {x.shape} -> {y.shape} {y.dtype}, "
+          f"range [{int(y.min())}, {int(y.max())}]")
+
+    # 2. Conv-as-GEMM (paper Fig. 3) --------------------------------------
+    img = jnp.asarray(rng.integers(-64, 64, (16, 16, 8), dtype=np.int8))
+    k = jnp.asarray(rng.integers(-64, 64, (3, 3, 8, 16), dtype=np.int8))
+    out = ops.conv2d_int8(img, k, k=3, stride=1, pad=1, shift=8, relu=True)
+    print(f"2. conv-as-GEMM: img {img.shape} * w {k.shape} -> {out.shape}")
+
+    # 3. Two-phase weight-transfer scheduling (paper SS III) --------------
+    # three tiles; tile2's load is too slow for tile1's short window but
+    # fits tile0's long one -> the adaptive phase relocates it.
+    tiles = [
+        TileCost(load_s=1.0, exec_s=6.0, mem_bytes=10),
+        TileCost(load_s=1.0, exec_s=1.0, mem_bytes=10),
+        TileCost(load_s=4.0, exec_s=1.0, mem_bytes=10),
+    ]
+    res = scheduler.two_phase(tiles, capacity=100)
+    print(f"3. scheduler: baseline stall {res.baseline.total_stall:.1f}s -> "
+          f"adaptive {res.adaptive.total_stall:.1f}s "
+          f"(reduction {res.stall_reduction:.0%}, "
+          f"utilization {res.adaptive.utilization:.0%})")
+
+    # 4. An assigned architecture: forward + one decode step --------------
+    cfg = smoke_variant(get_config("olmo-1b"))
+    api = model_api.get_api(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (1, 16)), jnp.int32)
+    logits, cache = api.prefill(cfg, params, {"tokens": tokens})
+    next_tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache = api.decode_step(cfg, params, cache, next_tok, jnp.int32(16))
+    print(f"4. olmo-1b (smoke): prefill logits {logits.shape}, "
+          f"greedy next token {int(next_tok[0, 0])}, decode logits {logits2.shape}")
+
+    print("\nquickstart OK")
+
+
+if __name__ == "__main__":
+    main()

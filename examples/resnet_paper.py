@@ -1,0 +1,86 @@
+"""Paper-faithful reproduction driver: INT8 ResNet inference through the
+systolic-array dataflow + the two-phase weight-transfer schedule.
+
+    PYTHONPATH=src python examples/resnet_paper.py [--variant 18|50] [--image-size 56]
+
+Steps, mirroring the paper's SS IV-V evaluation:
+  1. Build the quantized (power-of-two scales) ResNet.
+  2. Run one INT8 inference through im2col + int8 GEMM Pallas kernels
+     (interpret mode on CPU; the kernels' BlockSpecs target TPU VMEM).
+  3. Tile all conv/FC weights into R_SA x M_v tiles and run the two-phase
+     scheduler against the PU's URAM capacity -- Fig. 5(b,c).
+  4. Report the simulated Table I row (FPS / FPS-per-TOPS for 5x PU_1x +
+     5x PU_2x on the Alveo U50) next to the paper's measured values.
+"""
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pu import PU_1X, PU_2X
+from repro.core import scheduler as sched
+from repro.core import simulator as sim
+from repro.models import resnet
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", type=int, default=18, choices=(18, 50))
+    ap.add_argument("--image-size", type=int, default=56,
+                    help="reduced from 224 for CPU wall-time; dataflow identical")
+    args = ap.parse_args()
+
+    # 1. quantized model ---------------------------------------------------
+    params = resnet.init_params(args.variant, jax.random.PRNGKey(0))
+    n_params = sum(
+        int(np.prod(p["w"].q.shape)) for p in params.values()
+    )
+    print(f"ResNet-{args.variant}: {n_params/1e6:.1f}M int8 weights "
+          f"(power-of-two scales)")
+
+    # 2. one INT8 inference through the kernels -----------------------------
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(
+        rng.integers(-100, 100, (args.image_size, args.image_size, 3), dtype=np.int8)
+    )
+    t0 = time.perf_counter()
+    logits = resnet.forward_int8(args.variant, params, img)
+    dt = time.perf_counter() - t0
+    top5 = np.argsort(np.asarray(logits))[-5:][::-1]
+    print(f"int8 forward ({args.image_size}x{args.image_size}): "
+          f"{dt*1e3:.0f} ms on CPU-interpret, top-5 classes {top5.tolist()}")
+
+    # 3. weight-transfer schedule (Fig. 5b,c) -------------------------------
+    layers = sim.resnet_gemm_layers(args.variant)
+    for pu in (PU_2X, PU_1X):
+        tiles = sim.model_tiles(pu, layers)
+        res = sched.two_phase(tiles, capacity=pu.fast_mem_bytes)
+        weight_mb = sum(t.mem_bytes for t in tiles) / 2**20
+        cap_mb = pu.fast_mem_bytes / 2**20
+        print(
+            f"{pu.name}: {len(tiles)} tiles, weights {weight_mb:.1f} MiB vs "
+            f"URAM {cap_mb:.1f} MiB -> baseline stall "
+            f"{res.baseline.total_stall*1e3:.3f} ms, adaptive "
+            f"{res.adaptive.total_stall*1e3:.3f} ms "
+            f"(hidden {res.stall_reduction:.0%}); "
+            f"utilization {res.adaptive.utilization:.1%}"
+        )
+
+    # 4. Table I row ---------------------------------------------------------
+    s1 = sim.simulate_model(PU_1X, layers)
+    s2 = sim.simulate_model(PU_2X, layers)
+    fleet = sim.FleetSim(sims=[("pu1x", s1, 5), ("pu2x", s2, 5)])
+    paper = {18: (1237.7, 268.6), 50: (584.9, 126.9)}[args.variant]
+    print(
+        f"\nTable I (5x PU_1x + 5x PU_2x, {fleet.tops:.3f} TOPS):\n"
+        f"  simulated  {fleet.fps:8.1f} FPS   {fleet.fps_per_tops:6.1f} FPS/TOPS\n"
+        f"  paper      {paper[0]:8.1f} FPS   {paper[1]:6.1f} FPS/TOPS\n"
+        f"  deviation  {abs(fleet.fps-paper[0])/paper[0]:8.1%}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end serving driver (the paper's kind is inference acceleration):
+batched requests against an assigned architecture with continuous batching,
+the paper's weight-streaming schedule, and optional AIMC noise emulation.
+
+    PYTHONPATH=src python examples/serve_batched.py \
+        --arch mamba2-780m --requests 12 --max-new 16 [--aimc] [--full]
+
+With --full the unreduced config is used (slow on CPU; default is the
+reduced same-family smoke config).
+"""
+import argparse
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, smoke_variant
+from repro.core.aimc import AIMCNoiseModel
+from repro.core.pu import host_offload_config
+from repro.models import api as model_api
+from repro.runtime.serving import ServeConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--aimc", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = smoke_variant(cfg)
+    api = model_api.get_api(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+
+    engine = ServingEngine(
+        cfg,
+        params,
+        ServeConfig(
+            max_batch=args.max_batch,
+            max_len=args.prompt_len + args.max_new + 8,
+            max_new_tokens=args.max_new,
+            stream_pu=host_offload_config(),
+            aimc=AIMCNoiseModel() if args.aimc else None,
+        ),
+    )
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        engine.submit(rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32))
+    done = engine.run_until_drained()
+    dt = time.perf_counter() - t0
+
+    stats = engine.stats()
+    print(f"arch={args.arch} ({'full' if args.full else 'smoke'}), "
+          f"{len(done)}/{args.requests} requests in {dt:.1f}s")
+    print(f"  tokens: {stats['tokens']:.0f}  ({stats['tokens']/dt:.1f} tok/s, "
+          f"mean TTFT {stats['mean_ttft_s']*1e3:.0f} ms)")
+    print(f"  engine rounds: {stats['rounds']:.0f}, "
+          f"AIMC={'on' if args.aimc else 'off'}")
+    if engine.streaming_plan:
+        s = engine.streaming_plan.summary()
+        print(f"  weight streaming: {s['tiles']:.0f} tiles, "
+              f"baseline stall {s['baseline_stall_s']*1e3:.2f} ms -> "
+              f"adaptive {s['adaptive_stall_s']*1e3:.2f} ms "
+              f"(util {s['adaptive_util']:.1%})")
+    sample = done[0]
+    print(f"  sample generation (uid 0): {sample.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

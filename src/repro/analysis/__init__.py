@@ -1,0 +1,1 @@
+"""Compiled-artifact analysis: roofline terms from cost_analysis + HLO."""

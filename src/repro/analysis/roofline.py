@@ -1,0 +1,264 @@
+"""Roofline terms from a compiled dry-run artifact (DESIGN.md SS6).
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.
+
+Three measurement caveats of the CPU-backend dry-run, handled here:
+
+1. XLA:CPU ``cost_analysis()`` counts while-loop (scan) bodies ONCE.  We
+   therefore derive FLOPs from the jaxpr with static scan lengths
+   (analysis/jaxpr_cost.py) -- exact for dot_general, which dominates.
+   The raw cost_analysis numbers are still recorded in the artifact.
+
+2. Collective ops live inside scan bodies in the post-partitioning HLO, so
+   their bytes must be multiplied by the loop trip count.  We parse the HLO
+   text per-computation, recover each while's trip count from its condition
+   (compare-against-constant), and multiply recursively.
+
+3. HBM traffic: we use ``memory_analysis`` buffer classes --
+   arguments + outputs + 2x temporaries -- as the per-step traffic proxy
+   (each argument read once, outputs written once, temps written+read).
+   XLA:CPU's "bytes accessed" shares the while-body undercount and assumes
+   no fusion, so it is recorded but not used for the term.
+
+Shapes in the partitioned HLO are per-device; jaxpr shapes are global.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]"
+)
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+("
+    + "|".join(_COLL_KINDS)
+    + r")(-start|-done)?\("
+)
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)"
+    r"|while\(.*?\).*?body=%?([\w.\-]+).*?condition=%?([\w.\-]+)"
+)
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    """Map computation name -> its lines."""
+    comps: Dict[str, List[str]] = {}
+    current: Optional[str] = None
+    for line in hlo_text.splitlines():
+        # header: "%name (args...) -> result {"; args may nest parens
+        # (tuple-typed computations), so match lazily up to the '->'.
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*?\))?\s*->.*{\s*$", line)
+        if m and ("{" in line):
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(line)
+    return comps
+
+
+def _entry_name(hlo_text: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.MULTILINE)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Trip count from a counted-loop condition (max compare constant)."""
+    best = 1
+    for line in cond_lines:
+        if "compare" in line or "constant" in line:
+            for m in _CONST_RE.finditer(line):
+                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op_bytes: Dict[str, float]        # per-device bytes per collective kind
+    op_counts: Dict[str, float]       # dynamic counts (x trip counts)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.op_bytes.values())
+
+    @property
+    def wire_bytes(self) -> float:
+        """Ring-algorithm wire estimate: all-reduce ~2x its buffer."""
+        tot = 0.0
+        for kind, b in self.op_bytes.items():
+            tot += 2.0 * b if kind == "all-reduce" else float(b)
+        return tot
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    comps = _split_computations(hlo_text)
+    entry = _entry_name(hlo_text)
+
+    cache: Dict[str, Tuple[Dict[str, float], Dict[str, float]]] = {}
+
+    def walk(name: str, depth=0) -> Tuple[Dict[str, float], Dict[str, float]]:
+        if name in cache:
+            return cache[name]
+        b = {k: 0.0 for k in _COLL_KINDS}
+        c = {k: 0.0 for k in _COLL_KINDS}
+        cache[name] = (b, c)  # break cycles defensively
+        for line in comps.get(name, ()):
+            om = _OP_RE.match(line)
+            if om and om.group(3) != "-done":
+                kind = om.group(2)
+                result = om.group(1)
+                nbytes = sum(
+                    _shape_bytes(m.group(1), m.group(2))
+                    for m in _SHAPE_RE.finditer(result)
+                )
+                if om.group(3) == "-start":
+                    # start result tuples carry (input, output) buffers
+                    nbytes = nbytes / 2.0
+                b[kind] += nbytes
+                c[kind] += 1
+            elif " while(" in line and depth < 16:
+                wm = re.search(r"condition=%?([\w.\-]+)", line)
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                if wm and bm:
+                    trips = _trip_count(comps.get(wm.group(1), []))
+                    bb, bc = walk(bm.group(1), depth + 1)
+                    for k in _COLL_KINDS:
+                        b[k] += trips * bb[k]
+                        c[k] += trips * bc[k]
+            else:
+                # fusion/call ops referencing other computations
+                fm = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", line)
+                if fm and fm.group(1) in comps and depth < 16:
+                    bb, bc = walk(fm.group(1), depth + 1)
+                    for k in _COLL_KINDS:
+                        b[k] += bb[k]
+                        c[k] += bc[k]
+        cache[name] = (b, c)
+        return b, c
+
+    if entry is None:
+        # fall back: flat scan, no trip multiplication
+        b = {k: 0.0 for k in _COLL_KINDS}
+        c = {k: 0.0 for k in _COLL_KINDS}
+        for line in hlo_text.splitlines():
+            om = _OP_RE.match(line)
+            if om and om.group(3) != "-done":
+                kind = om.group(2)
+                nbytes = sum(
+                    _shape_bytes(m.group(1), m.group(2))
+                    for m in _SHAPE_RE.finditer(om.group(1))
+                )
+                b[kind] += nbytes
+                c[kind] += 1
+        return CollectiveStats(op_bytes=b, op_counts=c)
+
+    b, c = walk(entry)
+    return CollectiveStats(op_bytes=b, op_counts=c)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_device: float
+    useful_flops_ratio: float
+    bound_s: float                   # max of the three terms
+    roofline_fraction: float         # useful compute time / bound
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline(
+    jaxpr_flops_global: float,
+    mem_stats,                        # CompiledMemoryStats
+    collectives: CollectiveStats,
+    model_flops_global: float,
+    n_devices: int,
+) -> RooflineTerms:
+    flops = jaxpr_flops_global / n_devices
+    # Aliased (donated) outputs update their input buffer in place: the
+    # write traffic is the updated slice, not the full buffer, so aliased
+    # bytes are subtracted from the output-write term (they remain counted
+    # once as argument reads).
+    hbm_bytes = float(
+        mem_stats.argument_size_in_bytes
+        + mem_stats.output_size_in_bytes
+        - mem_stats.alias_size_in_bytes
+        + 2 * mem_stats.temp_size_in_bytes
+    )
+    coll = float(collectives.total_bytes)
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = coll / LINK_BW
+
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    model_fpd = model_flops_global / n_devices
+    bound = max(compute_s, memory_s, collective_s)
+    return RooflineTerms(
+        flops_per_device=flops,
+        hbm_bytes_per_device=hbm_bytes,
+        collective_bytes_per_device=coll,
+        collective_wire_bytes=collectives.wire_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops_per_device=model_fpd,
+        useful_flops_ratio=(model_fpd / flops) if flops else 0.0,
+        bound_s=bound,
+        roofline_fraction=(model_fpd / PEAK_FLOPS) / bound if bound else 0.0,
+    )
+
+
+def model_flops_global(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train / 2*N*D forward (N = active params,
+
+    D = tokens processed this step).
+    """
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

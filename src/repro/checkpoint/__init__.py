@@ -1,0 +1,10 @@
+"""Fault-tolerant checkpointing: atomic manifest + shards, async writes,
+elastic restore onto a different mesh."""
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    latest_step,
+    restore,
+    save,
+)
+
+__all__ = ["CheckpointManager", "latest_step", "restore", "save"]

@@ -1,0 +1,93 @@
+"""Config registry: ``get_config(arch_id)`` for every assigned architecture
+
+(+ the paper's own ResNets), and the assigned shape sets.
+
+Cell applicability (DESIGN.md SS4): ``long_500k`` requires sub-quadratic
+attention and runs only for ssm/hybrid/SWA architectures; every other
+(arch x shape) cell runs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, SHAPES_BY_NAME, smoke_variant
+from repro.configs import (
+    gemma3_12b,
+    granite_moe_3b_a800m,
+    internvl2_26b,
+    mamba2_780m,
+    mixtral_8x7b,
+    nemotron_4_15b,
+    olmo_1b,
+    starcoder2_15b,
+    whisper_medium,
+    zamba2_1_2b,
+)
+from repro.configs.resnet import RESNET18, RESNET50, ResNetConfig
+
+_CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        internvl2_26b.CONFIG,
+        granite_moe_3b_a800m.CONFIG,
+        mixtral_8x7b.CONFIG,
+        starcoder2_15b.CONFIG,
+        gemma3_12b.CONFIG,
+        olmo_1b.CONFIG,
+        nemotron_4_15b.CONFIG,
+        whisper_medium.CONFIG,
+        zamba2_1_2b.CONFIG,
+        mamba2_780m.CONFIG,
+    )
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_CONFIGS)
+
+RESNETS = {"resnet18": RESNET18, "resnet50": RESNET50}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _CONFIGS:
+        raise KeyError(f"unknown arch '{name}'; known: {sorted(_CONFIGS)}")
+    return _CONFIGS[name]
+
+
+def long_context_capable(cfg: ModelConfig) -> bool:
+    """Sub-quadratic attention -> long_500k cell runs (DESIGN.md SS4)."""
+    if cfg.family in ("ssm", "hybrid"):
+        return True
+    # pure sliding-window (no global layers) is sub-quadratic
+    return cfg.window is not None and not cfg.global_every
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped) for one (arch x shape) cell."""
+    if shape.name == "long_500k" and not long_context_capable(cfg):
+        return False, "full-attention arch: long_500k needs sub-quadratic attention"
+    return True, ""
+
+
+def all_cells() -> List[Tuple[ModelConfig, ShapeConfig, bool, str]]:
+    out = []
+    for name in ARCH_IDS:
+        cfg = get_config(name)
+        for shape in SHAPES:
+            ok, why = cell_applicable(cfg, shape)
+            out.append((cfg, shape, ok, why))
+    return out
+
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "SHAPES_BY_NAME",
+    "ARCH_IDS",
+    "RESNETS",
+    "ResNetConfig",
+    "get_config",
+    "smoke_variant",
+    "long_context_capable",
+    "cell_applicable",
+    "all_cells",
+]

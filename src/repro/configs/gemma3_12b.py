@@ -1,0 +1,25 @@
+"""Gemma3-12B [dense]: 48L d_model=3840 16H (GQA kv=8) d_ff=15360
+
+vocab=262144, 5 local : 1 global attention (window 1024), 128k context
+[hf:google/gemma-3-1b-pt].  long_500k is SKIPPED: the 1-in-6 global layers
+attend over the full cache, making the arch effectively full-attention.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b",
+    family="lm",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=15360,
+    vocab=262144,
+    head_dim=256,
+    rope_theta=1e6,
+    window=1024,
+    global_every=6,
+    norm="rmsnorm",
+    mlp="swiglu",
+    tie_embeddings=True,
+)

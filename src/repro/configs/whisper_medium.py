@@ -1,0 +1,25 @@
+"""Whisper-medium [audio enc-dec]: 24L enc + 24L dec, d_model=1024 16H (MHA)
+
+d_ff=4096 vocab=51865 [arXiv:2212.04356].  Conv/mel front-end is a STUB:
+input_specs provide precomputed frame embeddings (B, 1500, D).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=51865,
+    norm="layernorm",
+    mlp="gelu",
+    attn_bias=True,
+    mlp_bias=True,
+    pos_embed="learned",
+    encoder_layers=24,
+    encoder_frames=1500,
+    tie_embeddings=True,
+)

@@ -1,0 +1,25 @@
+"""Zamba2-1.2B [hybrid]: 38 Mamba2 layers (d_model=2048, state=64) + a
+
+shared attention block (32H MHA, d_ff=8192) applied every 6 layers
+[arXiv:2411.15242].  long_500k RUNS (SSM + periodic shared attention).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32000,
+    rope_theta=1e4,
+    norm="rmsnorm",
+    mlp="swiglu",
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    hybrid_attn_every=6,
+    tie_embeddings=True,
+)

@@ -1,0 +1,35 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+- quant:      INT8 + power-of-two scaling (the PU's arithmetic)
+- pu:         processing-unit cost model (FPGA PU_1x/PU_2x and TPU profiles)
+- scheduler:  two-phase weight-transfer scheduling heuristic (SS III)
+- streaming:  scheduler -> executable prefetch plans for real models
+- simulator:  cycle-approximate PU pipeline (reproduces Fig. 5 / Table I)
+- wrb:        wave-reorder-buffer model (SS II-A claim quantification)
+- aimc:       AIMC noise-injection unit (SS VI)
+"""
+from repro.core.pu import PUConfig, TileCost, PU_1X, PU_2X, tpu_v5e_config, host_offload_config
+from repro.core.quant import QTensor, quantize, dequantize, fake_quant
+from repro.core.scheduler import (
+    Schedule,
+    TwoPhaseResult,
+    adaptive_schedule,
+    baseline_schedule,
+    simulate,
+    two_phase,
+)
+from repro.core.streaming import (
+    StreamingExecutor,
+    StreamingPlan,
+    WeightTile,
+    gemm_sequence_tiles,
+    plan_streaming,
+)
+
+__all__ = [
+    "PUConfig", "TileCost", "PU_1X", "PU_2X", "tpu_v5e_config",
+    "host_offload_config", "QTensor", "quantize", "dequantize", "fake_quant",
+    "Schedule", "TwoPhaseResult", "adaptive_schedule", "baseline_schedule",
+    "simulate", "two_phase", "StreamingExecutor", "StreamingPlan",
+    "WeightTile", "gemm_sequence_tiles", "plan_streaming",
+]

@@ -1,0 +1,129 @@
+"""AIMC device-noise emulation (paper SS VI).
+
+The paper extends the accelerator with a Noise Injection Unit (NIU): each
+inference round, the NIU reads the *noiseless* weights of AIMC-emulated
+tiles from a pristine HBM region, injects fresh device-noise instances, and
+overwrites the weight regions the PU consumes -- so every round sees new
+noise, capturing device-level variation (PCM-style models per [17], [18]).
+
+TPU adaptation: the NIU is a pure JAX transform applied to the quantized
+weight pytree before each inference round, integrated as a hook of the
+serving engine (`runtime/serving.py`).  The "pristine region" is simply the
+original params pytree; per-round refresh is a jitted function of
+(params, rng).  The noise model follows the IBM aihwkit convention used by
+the paper's references: programming noise + read noise on the conductance
+scale, and temporal conductance drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor, quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class AIMCNoiseModel:
+    """PCM-like noise parameters (relative to the max programmed weight).
+
+    prog_noise_scale: std of programming error, proportional to |w| with a
+        floor -- sigma = scale * (0.25*|w| + 0.05*w_max)  (shape follows
+        aihwkit's PCM-like model in spirit).
+    read_noise_scale: std of per-read (per-inference) noise.
+    drift_nu: conductance drift exponent; weights decay as (t/t0)^-nu.
+    t_read: seconds since programming at which inference happens.
+    """
+
+    prog_noise_scale: float = 0.1
+    read_noise_scale: float = 0.02
+    drift_nu: float = 0.06
+    t_read: float = 3600.0
+    t0: float = 20.0
+
+    def enabled(self) -> bool:
+        return (
+            self.prog_noise_scale > 0
+            or self.read_noise_scale > 0
+            or self.drift_nu > 0
+        )
+
+
+def inject_noise_float(
+    w: jax.Array, key: jax.Array, model: AIMCNoiseModel
+) -> jax.Array:
+    """One fresh noise instance on a float weight tensor."""
+    w_max = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12)
+    k_prog, k_read = jax.random.split(key)
+    sigma_prog = model.prog_noise_scale * (0.25 * jnp.abs(w) + 0.05 * w_max)
+    w_noisy = w + sigma_prog * jax.random.normal(k_prog, w.shape, w.dtype)
+    if model.drift_nu > 0:
+        drift = (model.t_read / model.t0) ** (-model.drift_nu)
+        w_noisy = w_noisy * drift
+    if model.read_noise_scale > 0:
+        sigma_read = model.read_noise_scale * w_max
+        w_noisy = w_noisy + sigma_read * jax.random.normal(k_read, w.shape, w.dtype)
+    return w_noisy
+
+
+def _is_weight_leaf(path: tuple) -> bool:
+    # AIMC emulation targets GEMM weight matrices; biases/norms stay digital
+    # (the paper's NIU rewrites URAM *weight* regions, biases are static).
+    leaf_name = str(path[-1]) if path else ""
+    return "w" in leaf_name.lower() or "kernel" in leaf_name.lower()
+
+
+class NoiseInjectionUnit:
+    """The NIU: refresh a params pytree with fresh AIMC noise each round.
+
+    ``pristine`` is never mutated (the separate HBM region of SS VI); each
+    :meth:`refresh` returns a new noisy pytree for the PU to consume.
+    Quantized leaves (QTensor) are dequantized, perturbed, and requantized
+    onto the same power-of-two grid -- matching the read-modify-write loop
+    of the hardware NIU.
+    """
+
+    def __init__(
+        self,
+        pristine: Any,
+        model: AIMCNoiseModel,
+        target_filter=None,
+    ):
+        self.pristine = pristine
+        self.model = model
+        self.target_filter = target_filter or (lambda path, leaf: _is_weight_leaf(path))
+        self._refresh = jax.jit(self._refresh_impl)
+
+    def _refresh_impl(self, key: jax.Array) -> Any:
+        leaves_with_paths = jax.tree_util.tree_leaves_with_path(
+            self.pristine, is_leaf=lambda x: isinstance(x, QTensor)
+        )
+        keys = jax.random.split(key, max(1, len(leaves_with_paths)))
+        flat = []
+        for (path, leaf), k in zip(leaves_with_paths, keys):
+            if not self.target_filter(path, leaf):
+                flat.append(leaf)
+            elif isinstance(leaf, QTensor):
+                noisy = inject_noise_float(leaf.dequantize(), k, self.model)
+                flat.append(quantize(noisy, exp=leaf.exp))
+            elif hasattr(leaf, "ndim") and leaf.ndim >= 2:
+                flat.append(inject_noise_float(leaf, k, self.model))
+            else:
+                flat.append(leaf)
+        treedef = jax.tree_util.tree_structure(
+            self.pristine, is_leaf=lambda x: isinstance(x, QTensor)
+        )
+        return jax.tree_util.tree_unflatten(treedef, flat)
+
+    def refresh(self, key: jax.Array) -> Any:
+        """New noisy weights for one inference round."""
+        return self._refresh(key)
+
+
+def snr_db(clean: jax.Array, noisy: jax.Array) -> jax.Array:
+    """Signal-to-noise ratio of a noisy weight tensor, in dB."""
+    sig = jnp.sum(clean.astype(jnp.float32) ** 2)
+    err = jnp.sum((noisy.astype(jnp.float32) - clean.astype(jnp.float32)) ** 2)
+    return 10.0 * jnp.log10(sig / jnp.maximum(err, 1e-30))

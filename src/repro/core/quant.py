@@ -1,0 +1,124 @@
+"""INT8 quantization with power-of-two scaling factors.
+
+The paper (SS V) evaluates ResNet models "using 8-bit quantization with
+power-of-two scaling factors for activations, weights, and biases".  A
+power-of-two scale turns dequantization into a bit shift, which is what the
+PU's scale/shift module does after the systolic array (Fig. 2(b)).
+
+We reproduce that scheme exactly:
+
+    q = clip(round(x / 2**e), -128, 127)        with integer exponent e
+    x_hat = q * 2**e
+
+A GEMM  Y = W X + b  in this scheme runs as
+
+    acc_i32 = W_q X_q + b_q                     (int8 x int8 -> int32)
+    Y_q     = shift_round(acc_i32, s)           (s = e_w + e_x - e_y)
+
+which is exactly the datapath of the systolic array + scale/shift module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN = -128
+INT8_MAX = 127
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """An int8 tensor with a power-of-two scale: value = q * 2**exp.
+
+    ``exp`` is a per-tensor (scalar) integer exponent, as in the paper where
+    the scale/shift module applies a single shift per layer output.
+    """
+
+    q: jax.Array          # int8 payload
+    exp: jax.Array        # int32 scalar exponent e: value = q * 2**e
+
+    def dequantize(self) -> jax.Array:
+        return self.q.astype(jnp.float32) * jnp.exp2(self.exp.astype(jnp.float32))
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    def tree_flatten(self):
+        return (self.q, self.exp), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, exp = children
+        return cls(q=q, exp=exp)
+
+
+def pow2_exponent(x: jax.Array) -> jax.Array:
+    """Smallest integer e such that max|x| / 2**e fits int8 range."""
+    amax = jnp.max(jnp.abs(x))
+    amax = jnp.maximum(amax, 1e-30)
+    # We need amax / 2**e <= 127  =>  e >= log2(amax/127)
+    e = jnp.ceil(jnp.log2(amax / float(INT8_MAX)))
+    return e.astype(jnp.int32)
+
+
+def quantize(x: jax.Array, exp: Optional[jax.Array] = None) -> QTensor:
+    """Quantize a float tensor to int8 with a power-of-two scale."""
+    if exp is None:
+        exp = pow2_exponent(x)
+    scale = jnp.exp2(exp.astype(jnp.float32))
+    q = jnp.clip(jnp.round(x / scale), INT8_MIN, INT8_MAX).astype(jnp.int8)
+    return QTensor(q=q, exp=exp)
+
+
+def dequantize(t: QTensor) -> jax.Array:
+    return t.dequantize()
+
+
+def shift_round(acc: jax.Array, shift: jax.Array) -> jax.Array:
+    """Arithmetic right shift with round-half-away-from-zero, as a
+
+    power-of-two rescale of an int32 accumulator.  ``shift`` >= 0 shifts
+    right (divides by 2**shift); negative shifts multiply.
+    """
+    shift = jnp.asarray(shift, jnp.int32)
+
+    def right(acc):
+        # round(x / 2**s) for x int32: add half-ulp of the target grid.
+        half = jnp.where(shift > 0, (1 << jnp.maximum(shift - 1, 0)), 0)
+        pos = (acc + half) >> jnp.maximum(shift, 0)
+        neg = -((-acc + half) >> jnp.maximum(shift, 0))
+        return jnp.where(acc >= 0, pos, neg)
+
+    def left(acc):
+        return acc << jnp.maximum(-shift, 0)
+
+    return jnp.where(shift >= 0, right(acc), left(acc)).astype(jnp.int32)
+
+
+def requantize_i32(acc: jax.Array, acc_exp: jax.Array, out_exp: jax.Array) -> jax.Array:
+    """Rescale an int32 accumulator with exponent ``acc_exp`` onto the output
+
+    grid ``out_exp`` and saturate to int8.  This is the scale/shift module.
+    """
+    shift = (out_exp - acc_exp).astype(jnp.int32)
+    y = shift_round(acc, shift)
+    return jnp.clip(y, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def quantized_linear_exponents(w_exp: jax.Array, x_exp: jax.Array) -> jax.Array:
+    """Exponent of the int32 accumulator of W_q @ X_q."""
+    return (w_exp + x_exp).astype(jnp.int32)
+
+
+def fake_quant(x: jax.Array) -> jax.Array:
+    """Quantize-dequantize roundtrip (for accuracy studies / AIMC baselines)."""
+    return quantize(x).dequantize()

@@ -1,0 +1,162 @@
+"""Weight-streaming executor: the paper's scheduler driving real inference.
+
+Bridges the two-phase schedule (core/scheduler.py) and a JAX model: the
+model's weight matrices are partitioned into named tiles, costed under a
+memory-hierarchy profile (core/pu.py PUConfig -- URAM@FPGA, VMEM@TPU or
+host-offload@TPU), scheduled, and the plan is exposed to the serving engine
+which issues prefetches in plan order.
+
+On real TPU hardware the prefetch issue would be `jax.device_put` onto the
+target memory space ahead of the consuming layer; in this CPU container the
+executor runs the *plan* faithfully (same ordering, same residency account)
+and the compute functionally, so every schedule property is testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.pu import PUConfig, TileCost
+from repro.core import scheduler as sched
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightTile:
+    """A named weight tile: one schedulable unit of the model."""
+
+    name: str          # e.g. "layer3/mlp/up/rows0"
+    layer_index: int   # inference order of the consuming layer
+    n: int             # tile rows (<= R_SA after padding at the PU level)
+    m: int             # reduction dim
+    p: int             # activation columns it will be applied to
+
+    def cost(self, pu: PUConfig) -> TileCost:
+        return TileCost(
+            load_s=pu.load_time(self.m, self.n),
+            exec_s=pu.exec_time(self.m, self.p, self.n),
+            mem_bytes=pu.tile_bytes(self.m, self.n),
+        )
+
+
+@dataclasses.dataclass
+class StreamingPlan:
+    tiles: List[WeightTile]
+    result: sched.TwoPhaseResult
+    pu: PUConfig
+
+    @property
+    def schedule(self) -> sched.Schedule:
+        return self.result.adaptive
+
+    def prefetch_order(self) -> List[Tuple[str, int]]:
+        """(tile name, window) in load-issue order."""
+        order = sorted(
+            self.schedule.tiles, key=lambda t: (t.load_start, t.index)
+        )
+        return [(self.tiles[t.index].name, t.window) for t in order]
+
+    def summary(self) -> Dict[str, float]:
+        base, adpt = self.result.baseline, self.result.adaptive
+        return {
+            "tiles": len(self.tiles),
+            "capacity_bytes": float(self.pu.fast_mem_bytes),
+            "weight_bytes": float(sum(t.mem_bytes for t in adpt.tiles)),
+            "baseline_stall_s": base.total_stall,
+            "adaptive_stall_s": adpt.total_stall,
+            "stall_reduction": self.result.stall_reduction,
+            "baseline_util": base.utilization,
+            "adaptive_util": adpt.utilization,
+            "makespan_s": adpt.makespan,
+        }
+
+
+def plan_streaming(
+    tiles: Sequence[WeightTile], pu: PUConfig
+) -> StreamingPlan:
+    costs = [t.cost(pu) for t in tiles]
+    result = sched.two_phase(costs, capacity=pu.fast_mem_bytes)
+    return StreamingPlan(tiles=list(tiles), result=result, pu=pu)
+
+
+def gemm_sequence_tiles(
+    gemms: Sequence[Tuple[str, int, int, int]], pu: PUConfig
+) -> List[WeightTile]:
+    """Tile a sequence of (name, N, M, P) GEMMs into R_SA-row tiles,
+
+    exactly the paper's `R_SA x M_v` partitioning (SS III).
+    """
+    tiles: List[WeightTile] = []
+    for li, (name, n, m, p) in enumerate(gemms):
+        n_tiles = -(-n // pu.r_sa)
+        for t in range(n_tiles):
+            rows = min(pu.r_sa, n - t * pu.r_sa)
+            tiles.append(
+                WeightTile(
+                    name=f"{name}/rows{t * pu.r_sa}",
+                    layer_index=li,
+                    n=rows,
+                    m=m,
+                    p=p,
+                )
+            )
+    return tiles
+
+
+class StreamingExecutor:
+    """Execute a tiled computation under a streaming plan.
+
+    ``tile_fns[i]`` computes tile *i*'s output given its weights; weights
+    are fetched via ``fetch(tile_name)`` no earlier than the plan's issue
+    order allows, and evicted once executed (bounded residency).  The
+    executor asserts the plan's memory bound at runtime -- it is the
+    software twin of the hardware's URAM allocator.
+    """
+
+    def __init__(
+        self,
+        plan: StreamingPlan,
+        fetch: Callable[[str], Any],
+    ):
+        self.plan = plan
+        self.fetch = fetch
+        self._resident: Dict[int, Any] = {}
+        self._resident_bytes = 0
+        self.peak_resident_bytes = 0
+        self.fetches: List[str] = []
+
+    def run(
+        self, tile_fns: Sequence[Callable[[Any], Any]]
+    ) -> List[Any]:
+        schedule = self.plan.schedule
+        assert schedule.feasible, "infeasible streaming plan"
+        tiles = self.plan.tiles
+        issue_order = sorted(
+            range(len(tiles)), key=lambda i: (schedule.tiles[i].load_start, i)
+        )
+        costs = [schedule.tiles[i].mem_bytes for i in range(len(tiles))]
+        outputs: List[Optional[Any]] = [None] * len(tiles)
+        qpos = 0
+        for i in range(len(tiles)):
+            # Issue every prefetch the plan places before tile i executes.
+            while qpos < len(issue_order):
+                j = issue_order[qpos]
+                if schedule.tiles[j].load_start > schedule.tiles[i].exec_start and j != i:
+                    break
+                if j not in self._resident:
+                    self._resident[j] = self.fetch(tiles[j].name)
+                    self._resident_bytes += costs[j]
+                    self.fetches.append(tiles[j].name)
+                    self.peak_resident_bytes = max(
+                        self.peak_resident_bytes, self._resident_bytes
+                    )
+                    assert self._resident_bytes <= self.plan.pu.fast_mem_bytes, (
+                        f"residency {self._resident_bytes} exceeds capacity"
+                    )
+                qpos += 1
+            assert i in self._resident, f"tile {i} executed before its load"
+            outputs[i] = tile_fns[i](self._resident[i])
+            self._resident_bytes -= costs[i]
+            del self._resident[i]
+        return outputs

@@ -1,0 +1,16 @@
+"""Data pipeline: deterministic, restartable, shardable token streams."""
+from repro.data.pipeline import (
+    DataConfig,
+    SyntheticLMDataset,
+    TokenFileDataset,
+    build_dataset,
+    shard_batch,
+)
+
+__all__ = [
+    "DataConfig",
+    "SyntheticLMDataset",
+    "TokenFileDataset",
+    "build_dataset",
+    "shard_batch",
+]

@@ -1,0 +1,66 @@
+"""Pallas kernel: IM2COL patch extraction (paper SS II-B, Fig. 3).
+
+The paper realizes IM2COL as *address/length command bundles* to the AXI
+DataMover: feature maps stay in HWC order in HBM and the DMA engine gathers
+strided segments into the activation buffer, forming the patch matrix
+on-the-fly.  The TPU-native analogue: the kernel's index arithmetic plays
+the command generator, and the Pallas block pipeline plays the DMA -- each
+grid step gathers the strided rows of one output-row block from the (padded)
+feature map in VMEM and emits the corresponding patch-matrix rows.
+
+Grid: one program per output row (OH); each program emits the (OW, k*k*C)
+patch block for that row, assembled from k*k strided slices -- a direct
+transcription of the "address and length bundles ... according to the IFM
+dimensions and Conv characteristics".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _im2col_kernel(img_ref, out_ref, *, k: int, stride: int, ow: int, c: int):
+    oh_idx = pl.program_id(0)
+    base = oh_idx * stride
+    pieces = []
+    for ki in range(k):
+        row = img_ref[base + ki]          # (Wp, C) -- one feature-map row
+        for kj in range(k):
+            # Strided gather of OW segments of C channels: the DMA command
+            # bundle for (ki, kj) of this output row.
+            sl = jax.lax.slice(
+                row, (kj, 0), (kj + (ow - 1) * stride + 1, c), (stride, 1)
+            )                              # (OW, C)
+            pieces.append(sl)
+    # Patch layout: [(ki, kj) outer, C inner] -- matches weight reshape
+    # w4d.transpose(3,0,1,2).reshape(Cout, k*k*Cin).
+    out_ref[0] = jnp.stack(pieces, axis=1).reshape(ow, k * k * c)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "pad", "interpret"))
+def im2col(
+    img: jax.Array,        # (H, W, C), int8 (or any dtype)
+    k: int,
+    stride: int = 1,
+    pad: int = 0,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Patch matrix (OH*OW, k*k*C) from an HWC feature map."""
+    h, w, c = img.shape
+    imgp = jnp.pad(img, ((pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+
+    out = pl.pallas_call(
+        functools.partial(_im2col_kernel, k=k, stride=stride, ow=ow, c=c),
+        grid=(oh,),
+        in_specs=[pl.no_block_spec],
+        out_specs=pl.BlockSpec((1, ow, k * k * c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, k * k * c), img.dtype),
+        interpret=interpret,
+    )(imgp)
+    return out.reshape(oh * ow, k * k * c)

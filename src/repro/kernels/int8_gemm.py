@@ -1,0 +1,161 @@
+"""Pallas TPU kernel: the systolic-array INT8 GEMM with fused post-processing.
+
+TPU-native adaptation of the paper's PU datapath (DESIGN.md SS2):
+
+- The DSP48E2 systolic array becomes the MXU, driven by an int8 x int8 ->
+  int32 ``dot_general`` per VMEM block.
+- The URAM weight store + ping-pong BRAM activation buffers become the
+  Pallas block pipeline: ``BlockSpec`` index maps stream (bn x bm) weight
+  tiles and (bm x bp) activation tiles HBM->VMEM, and Pallas double-buffers
+  the next block's DMA under the current block's compute -- precisely the
+  overlap the ping-pong buffers provide on the FPGA.
+- Accumulation over ceil(M/bm) grid steps into a VMEM scratch mirrors the
+  ceil(M/C_SA)-round partial-product accumulation of the SA.
+- The epilogue fuses the scale/shift module (power-of-two requantize), the
+  ReLU unit, and the SIMD residual-addition unit of the post-processing
+  block -- applied on the last reduction step only.
+
+Grid layout: ``(N/bn, P/bp, M/bm)`` with the reduction axis innermost so
+each (i, j) output tile accumulates in scratch across consecutive steps.
+Block defaults are MXU-aligned (multiples of 128; int8 native tile on TPU
+is (32, 128), so 128 keeps both sublane and lane dims aligned).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import INT8_MAX, INT8_MIN
+
+
+def _gemm_kernel(
+    w_ref,            # (bn, bm) int8
+    x_ref,            # (bm, bp) int8
+    bias_ref,         # (bn, 1) int32
+    shift_ref,        # (1, 1) int32
+    res_ref,          # (bn, bp) int8 (dummy zeros when disabled)
+    out_ref,          # (bn, bp) int8
+    acc_ref,          # scratch (bn, bp) int32
+    *,
+    n_k: int,
+    relu: bool,
+    has_residual: bool,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.broadcast_to(
+            bias_ref[...].astype(jnp.int32), acc_ref.shape
+        )
+
+    acc_ref[...] += jax.lax.dot_general(
+        w_ref[...],
+        x_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        shift = shift_ref[0, 0]
+        # Power-of-two scale/shift with round-half-away-from-zero, exactly
+        # the scale/shifts module after the SA (Fig. 2(b)).
+        sh = jnp.maximum(shift, 0)
+        half = jnp.where(shift > 0, (1 << jnp.maximum(shift - 1, 0)), 0)
+        pos = (acc + half) >> sh
+        neg = -((-acc + half) >> sh)
+        y = jnp.where(acc >= 0, pos, neg)
+        y = jnp.where(shift >= 0, y, acc << jnp.maximum(-shift, 0))
+        y = jnp.clip(y, INT8_MIN, INT8_MAX)
+        if has_residual:
+            y = jnp.clip(y + res_ref[...].astype(jnp.int32), INT8_MIN, INT8_MAX)
+        if relu:
+            y = jnp.maximum(y, 0)
+        out_ref[...] = y.astype(jnp.int8)
+
+
+def _pad_to(a: jax.Array, mults: tuple) -> jax.Array:
+    pads = []
+    for dim, mult in zip(a.shape, mults):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if any(p[1] for p in pads):
+        a = jnp.pad(a, pads)
+    return a
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "relu", "block_n", "block_p", "block_m", "interpret",
+    ),
+)
+def int8_gemm(
+    w: jax.Array,                      # (N, M) int8
+    x: jax.Array,                      # (M, P) int8
+    bias: Optional[jax.Array] = None,  # (N,) int32
+    shift: jax.Array | int = 0,
+    residual: Optional[jax.Array] = None,  # (N, P) int8
+    *,
+    relu: bool = False,
+    block_n: int = 128,
+    block_p: int = 128,
+    block_m: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Quantized GEMM ``y = post(shift_round(w @ x + bias))`` -> int8 (N, P).
+
+    ``interpret=True`` validates on CPU; on TPU pass ``interpret=False``.
+    """
+    n, m = w.shape
+    m2, p = x.shape
+    assert m == m2, (w.shape, x.shape)
+    has_residual = residual is not None
+
+    if bias is None:
+        bias = jnp.zeros((n,), jnp.int32)
+    shift = jnp.asarray(shift, jnp.int32).reshape(1, 1)
+    if residual is None:
+        residual = jnp.zeros((1, 1), jnp.int8)  # dummy; blocks map to (0,0)
+
+    wp = _pad_to(w, (block_n, block_m))
+    xp = _pad_to(x, (block_m, block_p))
+    biasp = _pad_to(bias.reshape(-1, 1).astype(jnp.int32), (block_n, 1))
+    resp = _pad_to(residual, (block_n, block_p)) if has_residual else residual
+
+    np_, mp_ = wp.shape
+    pp_ = xp.shape[1]
+    n_k = mp_ // block_m
+    grid = (np_ // block_n, pp_ // block_p, n_k)
+
+    res_spec = (
+        pl.BlockSpec((block_n, block_p), lambda i, j, k: (i, j))
+        if has_residual
+        else pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))
+    )
+
+    out = pl.pallas_call(
+        functools.partial(
+            _gemm_kernel, n_k=n_k, relu=relu, has_residual=has_residual
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_m), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_m, block_p), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_n, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            res_spec,
+        ],
+        out_specs=pl.BlockSpec((block_n, block_p), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, pp_), jnp.int8),
+        scratch_shapes=[pltpu.VMEM((block_n, block_p), jnp.int32)],
+        interpret=interpret,
+    )(wp, xp, biasp, shift, resp)
+    return out[:n, :p]

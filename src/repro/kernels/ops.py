@@ -1,0 +1,115 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU,
+so the same call sites work in both environments.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import int8_gemm as _gemm
+from repro.kernels import im2col as _im2col
+from repro.kernels import ref as _ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def int8_gemm(
+    w: jax.Array,
+    x: jax.Array,
+    bias: Optional[jax.Array] = None,
+    shift: jax.Array | int = 0,
+    residual: Optional[jax.Array] = None,
+    *,
+    relu: bool = False,
+    block_n: int = 128,
+    block_p: int = 128,
+    block_m: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Systolic-array GEMM: int8 in, int8 out, fused bias/shift/ReLU/residual."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _gemm.int8_gemm(
+        w, x, bias, shift, residual,
+        relu=relu, block_n=block_n, block_p=block_p, block_m=block_m,
+        interpret=interpret,
+    )
+
+
+def im2col(
+    img: jax.Array, k: int, stride: int = 1, pad: int = 0,
+    *, interpret: Optional[bool] = None,
+) -> jax.Array:
+    """IM2COL patch matrix (OH*OW, k*k*C) from an HWC feature map."""
+    if interpret is None:
+        interpret = _default_interpret()
+    if k == 1 and pad == 0:
+        # The PU's common input datapath handles k=1, p=0, s in {1,2}
+        # as plain (strided) linear transfers without IM2COL (SS II-B).
+        img = img[::stride, ::stride]
+        h, w, c = img.shape
+        return img.reshape(h * w, c)
+    return _im2col.im2col(img, k, stride, pad, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "stride", "pad", "relu", "interpret")
+)
+def conv2d_int8(
+    img: jax.Array,                     # (H, W, Cin) int8
+    w4d: jax.Array,                     # (k, k, Cin, Cout) int8
+    bias: Optional[jax.Array] = None,   # (Cout,) int32
+    *,
+    k: int,
+    stride: int = 1,
+    pad: int = 0,
+    shift: jax.Array | int = 0,
+    relu: bool = False,
+    residual: Optional[jax.Array] = None,   # (OH, OW, Cout) int8
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Convolution as GEMM: IM2COL + systolic int8 GEMM (paper Fig. 3).
+
+    Returns (OH, OW, Cout) int8.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    h, w, cin = img.shape
+    cout = w4d.shape[-1]
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+
+    patches = im2col(img, k, stride, pad, interpret=interpret)  # (OH*OW, kkC)
+    wmat = w4d.transpose(3, 0, 1, 2).reshape(cout, k * k * cin)
+    res2d = None
+    if residual is not None:
+        res2d = residual.reshape(oh * ow, cout).T
+    y = int8_gemm(
+        wmat, patches.T, bias, shift, res2d, relu=relu, interpret=interpret
+    )  # (Cout, OH*OW)
+    return y.T.reshape(oh, ow, cout)
+
+
+def niu_refresh(
+    q: jax.Array, exp, seed, *, interpret: Optional[bool] = None, **kw
+) -> jax.Array:
+    """NIU round (paper SS VI): fresh AIMC noise on an int8 weight tile."""
+    from repro.kernels import niu as _niu
+
+    if interpret is None:
+        interpret = _default_interpret()
+    return _niu.niu_refresh(q, exp, seed, interpret=interpret, **kw)
+
+
+# Re-export oracles so tests/benchmarks can sweep kernels against them from
+# one import site.
+int8_gemm_ref = _ref.int8_gemm_ref
+im2col_ref = _ref.im2col_ref
+conv2d_int8_ref = _ref.conv2d_int8_ref

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests).
+
+Semantics mirror the PU datapath (paper Fig. 2):
+  int8 weights x int8 activations -> int32 accumulate (+ int32 bias on the
+  first column's C-port) -> power-of-two scale/shift -> saturate to int8 ->
+  optional ReLU -> optional fused residual addition -> final ReLU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import INT8_MAX, INT8_MIN, shift_round
+
+
+def int8_gemm_ref(
+    w: jax.Array,                      # (N, M) int8 weights
+    x: jax.Array,                      # (M, P) int8 activations
+    bias: Optional[jax.Array] = None,  # (N,) int32
+    shift: int | jax.Array = 0,        # power-of-two rescale (right shift)
+    relu: bool = False,
+    residual: Optional[jax.Array] = None,  # (N, P) int8, same output grid
+) -> jax.Array:
+    """Oracle for the systolic-array GEMM + post-processing chain."""
+    acc = jnp.dot(
+        w.astype(jnp.int32), x.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    if bias is not None:
+        acc = acc + bias.astype(jnp.int32)[:, None]
+    y = shift_round(acc, shift)
+    y = jnp.clip(y, INT8_MIN, INT8_MAX)
+    if residual is not None:
+        # SIMD element-wise addition unit; result saturates back to int8 and
+        # passes "again by the required activation function" (SS II-A).
+        y = jnp.clip(y + residual.astype(jnp.int32), INT8_MIN, INT8_MAX)
+    if relu:
+        y = jnp.maximum(y, 0)
+    return y.astype(jnp.int8)
+
+
+def im2col_ref(img: jax.Array, k: int, stride: int, pad: int) -> jax.Array:
+    """Oracle for the IM2COL transform.
+
+    ``img`` is (H, W, C) in the paper's HWC order; returns
+    (OH*OW, k*k*C) patch rows with [(ki, kj) outer, C inner] layout.
+    """
+    h, w, c = img.shape
+    imgp = jnp.pad(img, ((pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    rows = []
+    for ki in range(k):
+        for kj in range(k):
+            sl = jax.lax.slice(
+                imgp,
+                (ki, kj, 0),
+                (ki + (oh - 1) * stride + 1, kj + (ow - 1) * stride + 1, c),
+                (stride, stride, 1),
+            )  # (OH, OW, C)
+            rows.append(sl.reshape(oh * ow, c))
+    return jnp.concatenate(rows, axis=-1)
+
+
+def conv2d_int8_ref(
+    img: jax.Array,                    # (H, W, Cin) int8
+    w4d: jax.Array,                    # (k, k, Cin, Cout) int8
+    bias: Optional[jax.Array] = None,  # (Cout,) int32
+    stride: int = 1,
+    pad: int = 0,
+    shift: int | jax.Array = 0,
+    relu: bool = False,
+    residual: Optional[jax.Array] = None,  # (OH, OW, Cout) int8
+) -> jax.Array:
+    """End-to-end conv oracle via XLA's conv on int32 (layout-independent
+
+    cross-check of im2col + gemm composition).
+    """
+    lhs = img.astype(jnp.int32)[None].transpose(0, 3, 1, 2)        # NCHW
+    rhs = w4d.astype(jnp.int32).transpose(3, 2, 0, 1)              # OIHW
+    acc = jax.lax.conv_general_dilated(
+        lhs, rhs, (stride, stride), [(pad, pad), (pad, pad)],
+        preferred_element_type=jnp.int32,
+    )[0].transpose(1, 2, 0)                                        # (OH,OW,Cout)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.int32)
+    y = jnp.clip(shift_round(acc, shift), INT8_MIN, INT8_MAX)
+    if residual is not None:
+        y = jnp.clip(y + residual.astype(jnp.int32), INT8_MIN, INT8_MAX)
+    if relu:
+        y = jnp.maximum(y, 0)
+    return y.astype(jnp.int8)

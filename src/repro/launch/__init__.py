@@ -1,0 +1,4 @@
+"""Launchers: production mesh construction, the multi-pod dry-run,
+
+training and serving entry points.
+"""

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state -- jax locks the device count on first init, and
+only launch/dryrun.py may set the 512-placeholder-device XLA flag.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single-pod (data=16, model=16) = 256 chips, or two pods = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape, axes) -> Mesh:
+    """Arbitrary mesh (tests / elastic re-shard / hillclimb variants)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def single_device_mesh() -> Mesh:
+    return make_mesh((1,), ("data",))

@@ -1,0 +1,73 @@
+"""Serving launcher: batched requests against any assigned architecture.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --smoke \
+        --requests 16 --max-new 24 [--stream] [--aimc]
+
+``--stream`` plans host->HBM weight streaming with the paper's two-phase
+scheduler and prints the plan summary (stall reduction, utilization);
+``--aimc`` enables the SS VI noise-injection emulation, refreshing weights
+with fresh PCM-style noise every round.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, smoke_variant
+from repro.core.aimc import AIMCNoiseModel
+from repro.core.pu import host_offload_config
+from repro.models import api as model_api
+from repro.runtime.serving import ServeConfig, ServingEngine
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--stream", action="store_true",
+                    help="plan weight streaming (two-phase scheduler)")
+    ap.add_argument("--aimc", action="store_true",
+                    help="AIMC noise emulation (SS VI NIU)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+
+    api = model_api.get_api(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
+
+    serve_cfg = ServeConfig(
+        max_batch=args.max_batch,
+        max_len=args.prompt_len + args.max_new + 8,
+        max_new_tokens=args.max_new,
+        temperature=args.temperature,
+        seed=args.seed,
+        stream_pu=host_offload_config() if args.stream else None,
+        aimc=AIMCNoiseModel() if args.aimc else None,
+    )
+    engine = ServingEngine(cfg, params, serve_cfg)
+
+    rng = np.random.default_rng(args.seed)
+    for _ in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32)
+        engine.submit(prompt)
+
+    engine.run_until_drained()
+    stats = engine.stats()
+    print(json.dumps(stats, indent=1, default=float))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

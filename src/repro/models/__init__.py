@@ -1,0 +1,8 @@
+"""Model substrate: every assigned architecture family in pure JAX.
+
+- transformer.py : decoder-only LMs (dense / MoE / VLM-stub front-end)
+- ssm.py         : Mamba2 (SSD, chunked + recurrent decode)
+- hybrid.py      : Zamba2 (Mamba2 backbone + shared attention block)
+- encdec.py      : Whisper-style encoder-decoder (stub audio front-end)
+- resnet.py      : the paper's own INT8 ResNet-18/50 evaluation models
+"""

@@ -1,0 +1,177 @@
+"""Uniform model API: one dispatch surface over every architecture family.
+
+``get_api(cfg)`` returns a ModelAPI whose members all share signatures:
+
+    init_params(cfg, key) -> params
+    param_axes(cfg)       -> logical-axes pytree matching params
+    train_loss(cfg, params, batch) -> scalar
+    prefill(cfg, params, batch)    -> (logits, cache)
+    decode_step(cfg, params, cache, tokens, pos) -> (logits, cache)
+    init_cache(cfg, batch, max_len) -> cache
+    cache_axes(cfg)       -> logical-axes pytree matching cache
+
+``make_inputs`` / ``abstract_inputs`` build concrete or ShapeDtypeStruct
+batches for any (config x assigned shape) cell -- the dry-run, smoke tests
+and launchers all share them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, ssm_lm, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    family: str
+    init_params: Callable
+    param_axes: Callable
+    train_loss: Callable
+    prefill: Callable          # (cfg, params, batch) -> (logits, cache)
+    decode_step: Callable
+    init_cache: Callable
+    cache_axes: Callable
+
+
+def _tf_prefill(cfg, params, batch):
+    return transformer.prefill(cfg, params, batch["tokens"], batch.get("patch_embeds"))
+
+
+def _encdec_prefill(cfg, params, batch):
+    return encdec.prefill(cfg, params, batch["tokens"], batch["frames"])
+
+
+def _hybrid_prefill(cfg, params, batch):
+    return hybrid.prefill(cfg, params, batch["tokens"])
+
+
+def _ssm_prefill(cfg, params, batch):
+    return ssm_lm.prefill(cfg, params, batch["tokens"])
+
+
+_TRANSFORMER_API = ModelAPI(
+    family="lm",
+    init_params=transformer.init_params,
+    param_axes=transformer.param_axes,
+    train_loss=transformer.train_loss,
+    prefill=_tf_prefill,
+    decode_step=transformer.decode_step,
+    init_cache=transformer.init_cache,
+    cache_axes=transformer.cache_axes,
+)
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("lm", "moe", "vlm"):
+        return dataclasses.replace(_TRANSFORMER_API, family=fam)
+    if fam == "ssm":
+        return ModelAPI(
+            family=fam,
+            init_params=ssm_lm.init_params,
+            param_axes=ssm_lm.param_axes,
+            train_loss=ssm_lm.train_loss,
+            prefill=_ssm_prefill,
+            decode_step=ssm_lm.decode_step,
+            init_cache=ssm_lm.init_cache,
+            cache_axes=ssm_lm.cache_axes,
+        )
+    if fam == "hybrid":
+        return ModelAPI(
+            family=fam,
+            init_params=hybrid.init_params,
+            param_axes=hybrid.param_axes,
+            train_loss=hybrid.train_loss,
+            prefill=_hybrid_prefill,
+            decode_step=hybrid.decode_step,
+            init_cache=hybrid.init_cache,
+            cache_axes=hybrid.cache_axes,
+        )
+    if fam == "encdec":
+        return ModelAPI(
+            family=fam,
+            init_params=encdec.init_params,
+            param_axes=encdec.param_axes,
+            train_loss=encdec.train_loss,
+            prefill=_encdec_prefill,
+            decode_step=encdec.decode_step,
+            init_cache=encdec.init_cache,
+            cache_axes=encdec.cache_axes,
+        )
+    raise ValueError(f"unknown family {fam}")
+
+
+# ------------------------------------------------------------- inputs -----
+
+
+def _model_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract train/prefill batch for one (config, shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        out["mask"] = jax.ShapeDtypeStruct((b, s), jnp.float32)
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_patches, cfg.d_model), _model_dtype(cfg)
+        )
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_frames, cfg.d_model), _model_dtype(cfg)
+        )
+    return out
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, tuple]:
+    out = {"tokens": ("batch", None)}
+    if shape.kind == "train":
+        out["labels"] = ("batch", None)
+        out["mask"] = ("batch", None)
+    if cfg.family == "vlm":
+        out["patch_embeds"] = ("batch", None, None)
+    if cfg.family == "encdec":
+        out["frames"] = ("batch", None, None)
+    return out
+
+
+def decode_inputs_struct(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache, tokens, pos) abstract inputs for decode_step."""
+    api = get_api(cfg)
+    cache = jax.eval_shape(
+        lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, tokens, pos
+
+
+def make_concrete(struct_tree, key=None, vocab: int = 32000):
+    """Materialize a ShapeDtypeStruct pytree with deterministic test data.
+
+    Loss masks (leaves whose path ends in "mask") become all-ones.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(struct_tree)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for (path, s), k in zip(leaves, keys):
+        name = str(path[-1]) if path else ""
+        if "mask" in name:
+            out.append(jnp.ones(s.shape, s.dtype))
+        elif jnp.issubdtype(s.dtype, jnp.integer):
+            out.append(jax.random.randint(k, s.shape, 0, min(vocab, 512), s.dtype))
+        else:
+            out.append(jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,230 @@
+"""Grouped-query attention with streaming-softmax kv-chunking.
+
+One implementation serves every assigned attention variant:
+- full causal (starcoder2, olmo, nemotron, internvl2 backbone, whisper dec)
+- sliding-window (mixtral, window=4096)
+- mixed local:global (gemma3, 5 local : 1 global via per-layer window flags)
+- bidirectional (whisper encoder; cross-attention)
+- single-token decode against a KV cache (cache length masked by position)
+
+The kv dimension is processed in chunks with a running (max, denom, acc)
+softmax -- flash-attention dataflow expressed in lax.scan, which bounds the
+score tensor to (B, Sq, H, chunk) and keeps 500k-token caches shardable
+along kv_seq.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import logical_constraint
+
+_NEG = -1e30
+
+
+def gqa_attention(
+    q: jax.Array,                      # (B, Sq, H, hd)
+    k: jax.Array,                      # (B, Sk, KV, hd)
+    v: jax.Array,                      # (B, Sk, KV, hd)
+    *,
+    q_positions: Optional[jax.Array] = None,   # (B, Sq) absolute positions
+    kv_valid_len: Optional[jax.Array] = None,  # scalar/() -- # valid cache slots
+    causal: bool = True,
+    window: Optional[int] = None,              # static sliding window
+    window_arr: Optional[jax.Array] = None,    # dynamic per-call window (scalar)
+    kv_positions: Optional[jax.Array] = None,  # (Sk,) absolute position per
+                                               # cache slot (ring buffers);
+                                               # negative = never written
+    chunk: int = 512,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    groups = h // kv
+    scale = 1.0 / (hd ** 0.5)
+
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32)[None], (b, sq))
+
+    if sq == 1:
+        # Decode fast path: no kv-chunk scan.  The cache stays sharded along
+        # kv_seq and GSPMD turns the softmax reductions into the
+        # flash-decoding partial-max/partial-sum collectives.
+        return _decode_attention(
+            q, k, v,
+            q_positions=q_positions, kv_valid_len=kv_valid_len,
+            causal=causal, window=window, window_arr=window_arr,
+            kv_positions=kv_positions,
+        )
+    assert kv_positions is None, "ring-buffer caches are decode-only"
+
+    chunk = min(chunk, sk)
+    pad = (-sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    # (nc, B, chunk, KV, hd) for scan
+    kc = k.reshape(b, n_chunks, chunk, kv, hd).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, chunk, kv, hd).swapaxes(0, 1)
+
+    limit = jnp.asarray(sk if kv_valid_len is None else kv_valid_len, jnp.int32)
+    if window_arr is not None:
+        win = jnp.asarray(window_arr, jnp.int32)
+    elif window is not None:
+        win = jnp.asarray(window, jnp.int32)
+    else:
+        win = jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
+
+    qf = (q * scale).astype(q.dtype)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kci, vci, ci = inp
+        # Broadcast kv heads to query heads for this chunk only (bounded
+        # memory; avoids materializing repeated K/V for the whole cache).
+        k_rep = jnp.repeat(kci, groups, axis=2)          # (B, C, H, hd)
+        v_rep = jnp.repeat(vci, groups, axis=2)
+        s = jnp.einsum(
+            "bqhd,bchd->bqhc", qf, k_rep, preferred_element_type=jnp.float32
+        )                                                 # (B, Sq, H, C)
+        col = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)          # (C,)
+        row = q_positions[:, :, None, None]                            # (B,Sq,1,1)
+        colb = col[None, None, None, :]
+        valid = colb < limit
+        if causal:
+            valid &= colb <= row
+            valid &= colb > row - win
+        s = jnp.where(valid, s, _NEG)
+        m_c = jnp.max(s, axis=-1)                         # (B, Sq, H)
+        m_new = jnp.maximum(m, m_c)
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])                 # (B, Sq, H, C)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhc,bchd->bqhd", p.astype(v_rep.dtype), v_rep,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, h), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, sq, h), jnp.float32)
+    a0 = jnp.zeros((b, sq, h, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks, dtype=jnp.int32))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def _decode_attention(
+    q, k, v, *, q_positions, kv_valid_len, causal, window, window_arr,
+    kv_positions=None,
+):
+    """Single-query attention over the whole (sharded) cache, grouped GQA
+
+    einsums without materializing repeated K/V.
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    groups = h // kv
+    scale = 1.0 / (hd ** 0.5)
+
+    if window_arr is not None:
+        win = jnp.asarray(window_arr, jnp.int32)
+    elif window is not None:
+        win = jnp.asarray(window, jnp.int32)
+    else:
+        win = jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
+    limit = jnp.asarray(sk if kv_valid_len is None else kv_valid_len, jnp.int32)
+
+    qg = (q * scale).reshape(b, sq, kv, groups, hd)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, k, preferred_element_type=jnp.float32)
+    if kv_positions is not None:
+        # ring buffer: each slot carries its absolute position; negative
+        # positions mark never-written slots.
+        col = kv_positions.astype(jnp.int32)[None, None, None, None, :]
+        valid = col >= 0
+    else:
+        col = jnp.arange(sk, dtype=jnp.int32)[None, None, None, None, :]
+        valid = col < limit
+    row = q_positions[:, :, None, None, None]
+    if causal:
+        valid &= col <= row
+        valid &= col > row - win
+    s = jnp.where(valid, s, _NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    ctx = jnp.einsum(
+        "bqkgs,bskd->bqkgd", (p / jnp.maximum(l, 1e-30)).astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return ctx.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+# ------------------------------------------------------------ projections --
+
+
+def attn_params(cfg, key, d_model: Optional[int] = None) -> dict:
+    d = d_model or cfg.d_model
+    hd = cfg.head_dim
+    keys = jax.random.split(key, 4)
+    init = jax.nn.initializers.normal(0.02)
+    p = {
+        "wq": init(keys[0], (d, cfg.n_heads * hd), jnp.float32),
+        "wk": init(keys[1], (d, cfg.n_kv_heads * hd), jnp.float32),
+        "wv": init(keys[2], (d, cfg.n_kv_heads * hd), jnp.float32),
+        "wo": init(keys[3], (cfg.n_heads * hd, d), jnp.float32),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+        p["bo"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def attn_axes(cfg) -> dict:
+    ax = {
+        "wq": ("qkv_d", "heads"),
+        "wk": ("qkv_d", "kv_heads"),
+        "wv": ("qkv_d", "kv_heads"),
+        "wo": ("heads", "qkv_d"),
+    }
+    if cfg.attn_bias:
+        ax.update(
+            {"bq": ("heads",), "bk": ("kv_heads",), "bv": ("kv_heads",),
+             "bo": ("d_model",)}
+        )
+    return ax
+
+
+def project_qkv(cfg, p: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    q = logical_constraint(q, "batch", None, "heads", None)
+    k = logical_constraint(k, "batch", None, "kv_heads", None)
+    v = logical_constraint(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def project_out(cfg, p: dict, ctx: jax.Array) -> jax.Array:
+    b, s, h, hd = ctx.shape
+    y = ctx.reshape(b, s, h * hd) @ p["wo"].astype(ctx.dtype)
+    if cfg.attn_bias:
+        y = y + p["bo"].astype(ctx.dtype)
+    return y

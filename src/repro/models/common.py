@@ -1,0 +1,188 @@
+"""Shared model building blocks: norms, RoPE, activations, losses.
+
+All parameters are plain dict pytrees; all functions are pure.  Compute
+dtype is bf16 (v5e MXU-native) with f32 for norms/softmax/loss accumulation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import logical_constraint
+
+
+def rms_norm(x: jax.Array, scale: Optional[jax.Array], eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def layer_norm(
+    x: jax.Array,
+    scale: Optional[jax.Array],
+    bias: Optional[jax.Array],
+    eps: float = 1e-5,
+) -> jax.Array:
+    """LayerNorm; with scale=bias=None this is OLMo's non-parametric LN."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(cfg, x: jax.Array, params: Optional[dict]) -> jax.Array:
+    kind = cfg.norm
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"] if params else None)
+    if kind == "layernorm":
+        return layer_norm(
+            x,
+            params["scale"] if params else None,
+            params.get("bias") if params else None,
+        )
+    if kind == "nonparam_ln":      # OLMo: no learnable affine
+        return layer_norm(x, None, None)
+    raise ValueError(kind)
+
+
+def norm_params(cfg, d: int, key=None):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm == "nonparam_ln":
+        return None
+    raise ValueError(cfg.norm)
+
+
+def norm_axes(cfg):
+    if cfg.norm == "rmsnorm":
+        return {"scale": ("d_model",)}
+    if cfg.norm == "layernorm":
+        return {"scale": ("d_model",), "bias": ("d_model",)}
+    return None
+
+
+# ---------------------------------------------------------------- RoPE ----
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jax.Array,              # (B, S, H, hd)
+    positions: jax.Array,      # (B, S) int32
+    theta: float,
+) -> jax.Array:
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------- activations ----
+
+
+def mlp_act(kind: str, gate: jax.Array, up: Optional[jax.Array]) -> jax.Array:
+    """Gated or plain MLP nonlinearity.
+
+    swiglu: silu(gate) * up;  gelu: gelu(gate) (no up);  sq_relu:
+    relu(gate)**2 (Nemotron-4's squared ReLU).
+    """
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "gelu":
+        return jax.nn.gelu(gate)
+    if kind == "sq_relu":
+        r = jax.nn.relu(gate)
+        return r * r
+    raise ValueError(kind)
+
+
+def mlp_is_gated(kind: str) -> bool:
+    return kind == "swiglu"
+
+
+# ---------------------------------------------------------------- loss ----
+
+
+def chunked_softmax_xent(
+    x: jax.Array,              # (B, S, D) final hidden states
+    unembed: jax.Array,        # (D, V)
+    labels: jax.Array,         # (B, S) int32
+    mask: Optional[jax.Array] = None,   # (B, S) 0/1
+    chunk: int = 512,
+) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V) logits at once.
+
+    Scans over sequence chunks; each chunk's logits are recomputed in the
+    backward pass (jax.checkpoint), bounding live memory to
+    (B, chunk, V / model-shards).
+    """
+    b, s, d = x.shape
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n_chunks = x.shape[1] // chunk
+    xc = x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    mc = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    # Hoist the unembed cast + resharding OUT of the chunk scan: closed over
+    # inside the loop body, GSPMD would re-gather it (and reduce its grad)
+    # once per chunk -- 8x the necessary bytes under ZeRO rules (SSPerf
+    # iteration 3).  "loss_vocab"/"loss_embed_d" resolve per rule-set:
+    # vocab-parallel logits under fsdp_tp, replicate-once under zero3.
+    w_loss = logical_constraint(
+        unembed.astype(x.dtype), "loss_embed_d", "loss_vocab"
+    )
+
+    @jax.checkpoint
+    def one_chunk(xi, li, mi):
+        logits = (xi @ w_loss).astype(jnp.float32)
+        logits = logical_constraint(logits, "batch", None, "loss_vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mi
+        return jnp.sum(nll), jnp.sum(mi)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xi, li, mi = inp
+        t, c = one_chunk(xi, li, mi)
+        return (tot + t, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (n, d)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    emb = jnp.zeros((n, d), jnp.float32)
+    emb = emb.at[:, 0::2].set(jnp.sin(angle))
+    emb = emb.at[:, 1::2].set(jnp.cos(angle))
+    return emb

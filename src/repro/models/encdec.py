@@ -1,0 +1,275 @@
+"""Whisper-style encoder-decoder.
+
+The audio front-end (mel conv stack) is a STUB per the assignment:
+``input_specs`` provides precomputed frame embeddings (B, frames, D).
+The transformer backbone is faithful: bidirectional encoder, causal
+decoder with cross-attention, GELU MLPs, LayerNorm with bias, learned
+decoder positions, sinusoidal encoder positions, tied unembedding.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import (
+    apply_norm,
+    chunked_softmax_xent,
+    norm_axes,
+    norm_params,
+    sinusoidal_positions,
+)
+from repro.parallel.sharding import logical_constraint
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ------------------------------------------------------------- params -----
+
+
+def _enc_layer(cfg, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": norm_params(cfg, cfg.d_model, k1),
+        "attn": attn.attn_params(cfg, k1),
+        "mlp_norm": norm_params(cfg, cfg.d_model, k2),
+        "mlp": mlp_mod.mlp_params(cfg, k2),
+    }
+
+
+def _dec_layer(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn_norm": norm_params(cfg, cfg.d_model, k1),
+        "attn": attn.attn_params(cfg, k1),
+        "cross_norm": norm_params(cfg, cfg.d_model, k2),
+        "cross": attn.attn_params(cfg, k2),
+        "mlp_norm": norm_params(cfg, cfg.d_model, k3),
+        "mlp": mlp_mod.mlp_params(cfg, k3),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, 6)
+    init = jax.nn.initializers.normal(0.02)
+    enc_keys = jnp.stack(jax.random.split(keys[0], cfg.encoder_layers))
+    dec_keys = jnp.stack(jax.random.split(keys[1], cfg.n_layers))
+    return {
+        "embed": init(keys[2], (cfg.vocab, cfg.d_model), jnp.float32),
+        "dec_pos": init(keys[3], (cfg.max_position, cfg.d_model), jnp.float32),
+        "enc_layers": jax.vmap(lambda k: _enc_layer(cfg, k))(enc_keys),
+        "enc_norm": norm_params(cfg, cfg.d_model, keys[4]),
+        "dec_layers": jax.vmap(lambda k: _dec_layer(cfg, k))(dec_keys),
+        "dec_norm": norm_params(cfg, cfg.d_model, keys[5]),
+    }
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    is_ax_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+    enc_ax = {
+        "attn_norm": norm_axes(cfg), "attn": attn.attn_axes(cfg),
+        "mlp_norm": norm_axes(cfg), "mlp": mlp_mod.mlp_axes(cfg),
+    }
+    dec_ax = {
+        "attn_norm": norm_axes(cfg), "attn": attn.attn_axes(cfg),
+        "cross_norm": norm_axes(cfg), "cross": attn.attn_axes(cfg),
+        "mlp_norm": norm_axes(cfg), "mlp": mlp_mod.mlp_axes(cfg),
+    }
+    return {
+        "embed": ("vocab", "embed_d"),
+        "dec_pos": (None, "embed_d"),
+        "enc_layers": jax.tree.map(lambda a: ("layers",) + a, enc_ax, is_leaf=is_ax_leaf),
+        "enc_norm": norm_axes(cfg),
+        "dec_layers": jax.tree.map(lambda a: ("layers",) + a, dec_ax, is_leaf=is_ax_leaf),
+        "dec_norm": norm_axes(cfg),
+    }
+
+
+# ------------------------------------------------------------- encoder ----
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """frames: (B, T_enc, D) stub embeddings -> encoder output (B, T_enc, D)."""
+    b, t, d = frames.shape
+    x = frames.astype(_dtype(cfg)) + sinusoidal_positions(t, d).astype(_dtype(cfg))[None]
+    x = logical_constraint(x, "batch", "seq", "d_model")
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def body(x, lp):
+        h = apply_norm(cfg, x, lp.get("attn_norm"))
+        q, k, v = attn.project_qkv(cfg, lp["attn"], h)
+        ctx = attn.gqa_attention(
+            q, k, v, q_positions=positions, causal=False, chunk=cfg.attn_chunk
+        )
+        x = x + attn.project_out(cfg, lp["attn"], ctx)
+        h2 = apply_norm(cfg, x, lp.get("mlp_norm"))
+        x = x + mlp_mod.mlp_apply(cfg, lp["mlp"], h2)
+        return x, None
+
+    if cfg.remat == "layer":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(cfg, x, params.get("enc_norm"))
+
+
+# ------------------------------------------------------------- decoder ----
+
+
+def _dec_layer_fn(
+    cfg, lp, x, positions, enc_out, self_cache=None, cross_kv=None, decode_pos=None
+):
+    h = apply_norm(cfg, x, lp.get("attn_norm"))
+    q, k, v = attn.project_qkv(cfg, lp["attn"], h)
+    new_cache = None
+    if self_cache is not None:
+        ck, cv = self_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, decode_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, decode_pos, 0, 0))
+        new_cache = (ck, cv)
+        k, v = ck.astype(x.dtype), cv.astype(x.dtype)
+        valid = decode_pos + x.shape[1]
+    else:
+        valid = None
+    ctx = attn.gqa_attention(
+        q, k, v, q_positions=positions, kv_valid_len=valid, causal=True,
+        chunk=cfg.attn_chunk,
+    )
+    x = x + attn.project_out(cfg, lp["attn"], ctx)
+
+    # cross-attention over encoder output (bidirectional, fixed length)
+    h2 = apply_norm(cfg, x, lp.get("cross_norm"))
+    qc = (h2 @ lp["cross"]["wq"].astype(x.dtype))
+    if cfg.attn_bias:
+        qc = qc + lp["cross"]["bq"].astype(x.dtype)
+    b, s, _ = h2.shape
+    qc = qc.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    if cross_kv is not None:
+        kc, vc = cross_kv
+    else:
+        enc_h = enc_out
+        kc = enc_h @ lp["cross"]["wk"].astype(x.dtype)
+        vc = enc_h @ lp["cross"]["wv"].astype(x.dtype)
+        if cfg.attn_bias:
+            kc = kc + lp["cross"]["bk"].astype(x.dtype)
+            vc = vc + lp["cross"]["bv"].astype(x.dtype)
+        te = enc_h.shape[1]
+        kc = kc.reshape(b, te, cfg.n_kv_heads, cfg.head_dim)
+        vc = vc.reshape(b, te, cfg.n_kv_heads, cfg.head_dim)
+    ctx2 = attn.gqa_attention(
+        qc, kc, vc, q_positions=positions, causal=False, chunk=cfg.attn_chunk
+    )
+    y = ctx2.reshape(b, s, cfg.n_heads * cfg.head_dim) @ lp["cross"]["wo"].astype(x.dtype)
+    if cfg.attn_bias:
+        y = y + lp["cross"]["bo"].astype(x.dtype)
+    x = x + y
+
+    h3 = apply_norm(cfg, x, lp.get("mlp_norm"))
+    x = x + mlp_mod.mlp_apply(cfg, lp["mlp"], h3)
+    return x, new_cache, (kc, vc)
+
+
+def decode_full(cfg, params, tokens, enc_out):
+    """Teacher-forced decoder pass (training) -> hidden (B, S, D)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+    x = x + params["dec_pos"].astype(x.dtype)[:s][None]
+    x = logical_constraint(x, "batch", "seq", "d_model")
+
+    def body(x, lp):
+        x, _, _ = _dec_layer_fn(cfg, lp, x, positions, enc_out)
+        return x, None
+
+    if cfg.remat == "layer":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return apply_norm(cfg, x, params.get("dec_norm"))
+
+
+def train_loss(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    enc_out = encode(cfg, params, batch["frames"])
+    hidden = decode_full(cfg, params, batch["tokens"], enc_out)
+    return chunked_softmax_xent(
+        hidden, params["embed"].T, batch["labels"], batch.get("mask")
+    )
+
+
+# ------------------------------------------------------------- serving ----
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    dt = _dtype(cfg)
+    l, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    te = cfg.encoder_frames
+    return {
+        "self_k": jnp.zeros((l, batch, max_len, kv, hd), dt),
+        "self_v": jnp.zeros((l, batch, max_len, kv, hd), dt),
+        "cross_k": jnp.zeros((l, batch, te, kv, hd), dt),
+        "cross_v": jnp.zeros((l, batch, te, kv, hd), dt),
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    kv_ax = ("layers", "batch", "kv_seq", "kv_heads", None)
+    cr_ax = ("layers", "batch", None, "kv_heads", None)
+    return {"self_k": kv_ax, "self_v": kv_ax, "cross_k": cr_ax, "cross_v": cr_ax}
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, frames: jax.Array):
+    """Encode + teacher-forced pass, emitting all caches for decode."""
+    enc_out = encode(cfg, params, frames)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+    x = x + params["dec_pos"].astype(x.dtype)[:s][None]
+
+    cache0 = init_cache(cfg, b, s)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        x, new_cache, cross = _dec_layer_fn(
+            cfg, lp, x, positions, enc_out, self_cache=(ck, cv), decode_pos=0
+        )
+        return x, (new_cache[0], new_cache[1], cross[0], cross[1])
+
+    x, (sk, sv, crk, crv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache0["self_k"], cache0["self_v"])
+    )
+    x = apply_norm(cfg, x, params.get("dec_norm"))
+    logits = (x[:, -1] @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+    return logits, {"self_k": sk, "self_v": sv, "cross_k": crk, "cross_v": crv}
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array, pos: jax.Array):
+    b = tokens.shape[0]
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+    x = x + params["dec_pos"].astype(x.dtype)[pos][None, None, :]
+
+    def body(x, xs):
+        lp, sk, sv, ck, cv = xs
+        x, new_cache, _ = _dec_layer_fn(
+            cfg, lp, x, positions, None, self_cache=(sk, sv),
+            cross_kv=(ck.astype(x.dtype), cv.astype(x.dtype)), decode_pos=pos,
+        )
+        return x, (new_cache[0], new_cache[1])
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["self_k"], cache["self_v"],
+         cache["cross_k"], cache["cross_v"]),
+    )
+    x = apply_norm(cfg, x, params.get("dec_norm"))
+    logits = (x[:, -1] @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+    return logits, {
+        "self_k": sk, "self_v": sv,
+        "cross_k": cache["cross_k"], "cross_v": cache["cross_v"],
+    }

@@ -1,0 +1,329 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a *shared* attention block.
+
+The real Zamba2 interleaves one shared transformer block (re-used weights)
+every ~6 Mamba2 layers.  We structure the stack as
+``n_groups = n_layers // hybrid_attn_every`` groups, each = [shared
+attention+MLP block] followed by ``hybrid_attn_every`` scanned Mamba2
+layers, plus a tail of remaining Mamba2 layers.  The shared block's weights
+are closed over the group scan (one copy), matching the weight-sharing that
+defines the architecture.
+
+Decode carries: per-group KV caches (the shared block sees different inputs
+at each invocation) + per-layer (conv, ssm) states.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import apply_norm, apply_rope, chunked_softmax_xent, norm_axes, norm_params
+from repro.parallel.sharding import logical_constraint
+
+
+def _groups(cfg: ModelConfig) -> Tuple[int, int]:
+    every = cfg.hybrid_attn_every
+    return cfg.n_layers // every, cfg.n_layers % every
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ------------------------------------------------------------- params -----
+
+
+def _mamba_layer(cfg, key):
+    k1, k2 = jax.random.split(key)
+    return {"norm": norm_params(cfg, cfg.d_model, k1), "ssm": ssm_mod.ssm_params(cfg, k2)}
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    n_groups, tail = _groups(cfg)
+    keys = jax.random.split(key, 6)
+    init = jax.nn.initializers.normal(0.02)
+    gkeys = jax.random.split(keys[3], n_groups * cfg.hybrid_attn_every).reshape(
+        n_groups, cfg.hybrid_attn_every, 2
+    )
+    params = {
+        "embed": init(keys[0], (cfg.vocab, cfg.d_model), jnp.float32),
+        "final_norm": norm_params(cfg, cfg.d_model, keys[1]),
+        "shared": {
+            "attn_norm": norm_params(cfg, cfg.d_model, keys[2]),
+            "attn": attn.attn_params(cfg, keys[2]),
+            "mlp_norm": norm_params(cfg, cfg.d_model, keys[2]),
+            "mlp": mlp_mod.mlp_params(cfg, keys[2]),
+        },
+        "groups": jax.vmap(jax.vmap(lambda k: _mamba_layer(cfg, k)))(gkeys),
+    }
+    if tail:
+        tkeys = jax.random.split(keys[4], tail)
+        params["tail"] = jax.vmap(lambda k: _mamba_layer(cfg, k))(jnp.stack(tkeys))
+    if not cfg.tie_embeddings:
+        params["unembed"] = init(keys[5], (cfg.d_model, cfg.vocab), jnp.float32)
+    return params
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    n_groups, tail = _groups(cfg)
+    mamba_ax = {"norm": norm_axes(cfg), "ssm": ssm_mod.ssm_axes(cfg)}
+    is_ax_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+    group_ax = jax.tree.map(lambda ax: ("layers", "layers") + ax, mamba_ax, is_leaf=is_ax_leaf)
+    axes = {
+        "embed": ("vocab", "embed_d"),
+        "final_norm": norm_axes(cfg),
+        "shared": {
+            "attn_norm": norm_axes(cfg),
+            "attn": attn.attn_axes(cfg),
+            "mlp_norm": norm_axes(cfg),
+            "mlp": mlp_mod.mlp_axes(cfg),
+        },
+        "groups": group_ax,
+    }
+    if tail:
+        axes["tail"] = jax.tree.map(lambda ax: ("layers",) + ax, mamba_ax, is_leaf=is_ax_leaf)
+    if not cfg.tie_embeddings:
+        axes["unembed"] = ("embed_d", "vocab")
+    return axes
+
+
+# ------------------------------------------------------------- forward ----
+
+
+def _shared_block(
+    cfg, sp, x, positions, cache_kv=None, decode_pos=None
+):
+    h = apply_norm(cfg, x, sp.get("attn_norm"))
+    q, k, v = attn.project_qkv(cfg, sp["attn"], h)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache_kv is not None:
+        ck, cv = cache_kv
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, decode_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, decode_pos, 0, 0))
+        new_cache = (ck, cv)
+        k, v = ck.astype(x.dtype), cv.astype(x.dtype)
+        valid = decode_pos + x.shape[1]
+    else:
+        valid = None
+    ctx = attn.gqa_attention(
+        q, k, v, q_positions=positions, kv_valid_len=valid, causal=True,
+        chunk=cfg.attn_chunk,
+    )
+    x = x + attn.project_out(cfg, sp["attn"], ctx)
+    h2 = apply_norm(cfg, x, sp.get("mlp_norm"))
+    x = x + mlp_mod.mlp_apply(cfg, sp["mlp"], h2)
+    return x, new_cache
+
+
+def _mamba_layer_apply(cfg, lp, x, state=None):
+    h = apply_norm(cfg, x, lp.get("norm"))
+    y, new_state = ssm_mod.ssm_apply(cfg, lp["ssm"], h, state)
+    return x + y, new_state
+
+
+def forward_hidden(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,
+):
+    b, s = tokens.shape
+    n_groups, tail = _groups(cfg)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+    x = logical_constraint(x, "batch", "seq", "d_model")
+
+    # Cache-collecting prefill is the sequential path below; this scan is
+    # the training/forward path (no caches).
+    def group_fn_train(x, gp):
+        x, _ = _shared_block(cfg, params["shared"], x, positions)
+
+        def mamba_fn(carry, lp):
+            y, _ = _mamba_layer_apply(cfg, lp, carry, None)
+            return y, None
+
+        if cfg.remat == "layer":
+            mamba_fn = jax.checkpoint(
+                mamba_fn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        x, _ = jax.lax.scan(mamba_fn, x, gp)
+        return x, None
+
+    x, _ = jax.lax.scan(group_fn_train, x, params["groups"])
+    if tail:
+        def mamba_fn(carry, lp):
+            y, _ = _mamba_layer_apply(cfg, lp, carry, None)
+            return y, None
+        if cfg.remat == "layer":
+            mamba_fn = jax.checkpoint(
+                mamba_fn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        x, _ = jax.lax.scan(mamba_fn, x, params["tail"])
+    x = apply_norm(cfg, x, params.get("final_norm"))
+    return x
+
+
+def _unembed_matrix(cfg, params):
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def train_loss(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    hidden = forward_hidden(cfg, params, batch["tokens"])
+    return chunked_softmax_xent(
+        hidden, _unembed_matrix(cfg, params), batch["labels"], batch.get("mask")
+    )
+
+
+# ------------------------------------------------------------- serving ----
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    n_groups, tail = _groups(cfg)
+    kv_shape = (n_groups, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    dt = _dtype(cfg)
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    n_mamba = cfg.n_layers
+    return {
+        "attn_k": jnp.zeros(kv_shape, dt),
+        "attn_v": jnp.zeros(kv_shape, dt),
+        "conv": jnp.zeros((n_mamba, batch, cfg.ssm_conv - 1, conv_dim), dt),
+        "ssm": jnp.zeros(
+            (n_mamba, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        ),
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    return {
+        "attn_k": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "attn_v": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "conv": ("layers", "batch", None, "ff"),
+        "ssm": ("layers", "batch", "heads", None, None),
+    }
+
+
+def _mamba_param_slices(cfg, params):
+    """Yield per-layer mamba params in inference order (groups then tail)."""
+    n_groups, tail = _groups(cfg)
+    every = cfg.hybrid_attn_every
+    flat = jax.tree.map(
+        lambda a: a.reshape((n_groups * every,) + a.shape[2:]), params["groups"]
+    )
+    if tail:
+        flat = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), flat, params["tail"]
+        )
+    return flat
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array):
+    """Sequential-over-layers prefill that also fills all caches."""
+    b, s = tokens.shape
+    n_groups, tail = _groups(cfg)
+    every = cfg.hybrid_attn_every
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+    cache = init_cache(cfg, b, s)
+    mamba_flat = _mamba_param_slices(cfg, params)
+
+    attn_ks, attn_vs, convs, ssms = [], [], [], []
+    li = 0
+    for g in range(n_groups):
+        x, kv = _shared_block(
+            cfg, params["shared"], x, positions,
+            cache_kv=(cache["attn_k"][g], cache["attn_v"][g]), decode_pos=0,
+        )
+        attn_ks.append(kv[0])
+        attn_vs.append(kv[1])
+        for i in range(every):
+            lp = jax.tree.map(lambda a: a[li], mamba_flat)
+            x, st = _mamba_layer_apply(
+                cfg, lp, x, ssm_mod.init_ssm_state(cfg, b)
+            )
+            convs.append(st[0])
+            ssms.append(st[1])
+            li += 1
+    for i in range(tail):
+        lp = jax.tree.map(lambda a: a[li], mamba_flat)
+        x, st = _mamba_layer_apply(cfg, lp, x, ssm_mod.init_ssm_state(cfg, b))
+        convs.append(st[0])
+        ssms.append(st[1])
+        li += 1
+    x = apply_norm(cfg, x, params.get("final_norm"))
+    logits = (x[:, -1] @ _unembed_matrix(cfg, params).astype(x.dtype)).astype(jnp.float32)
+    new_cache = {
+        "attn_k": jnp.stack(attn_ks),
+        "attn_v": jnp.stack(attn_vs),
+        "conv": jnp.stack(convs).astype(cache["conv"].dtype),
+        "ssm": jnp.stack(ssms),
+    }
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array, pos: jax.Array):
+    b = tokens.shape[0]
+    n_groups, tail = _groups(cfg)
+    every = cfg.hybrid_attn_every
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+    mamba_flat = _mamba_param_slices(cfg, params)
+
+    group_mamba = jax.tree.map(
+        lambda a: a[: n_groups * every].reshape((n_groups, every) + a.shape[1:]),
+        mamba_flat,
+    )
+
+    def group_fn(x, xs):
+        gp, kc, vc, conv_st, ssm_st = xs
+        x, kv = _shared_block(
+            cfg, params["shared"], x, positions, cache_kv=(kc, vc), decode_pos=pos
+        )
+
+        def mamba_fn(carry, inner):
+            lp, cst, sst = inner
+            h = apply_norm(cfg, carry, lp.get("norm"))
+            y, new_state = ssm_mod.ssm_decode_step(cfg, lp["ssm"], h, (cst, sst))
+            return carry + y, new_state
+
+        x, (new_conv, new_ssm) = jax.lax.scan(mamba_fn, x, (gp, conv_st, ssm_st))
+        return x, (kv[0], kv[1], new_conv, new_ssm)
+
+    conv_groups = cache["conv"][: n_groups * every].reshape(
+        (n_groups, every) + cache["conv"].shape[1:]
+    )
+    ssm_groups = cache["ssm"][: n_groups * every].reshape(
+        (n_groups, every) + cache["ssm"].shape[1:]
+    )
+    x, (ks, vs, convs, ssms) = jax.lax.scan(
+        group_fn, x, (group_mamba, cache["attn_k"], cache["attn_v"], conv_groups, ssm_groups)
+    )
+    new_conv = convs.reshape((-1,) + convs.shape[2:])
+    new_ssm = ssms.reshape((-1,) + ssms.shape[2:])
+    if tail:
+        tail_params = jax.tree.map(lambda a: a[n_groups * every :], mamba_flat)
+
+        def mamba_fn(carry, inner):
+            lp, cst, sst = inner
+            h = apply_norm(cfg, carry, lp.get("norm"))
+            y, new_state = ssm_mod.ssm_decode_step(cfg, lp["ssm"], h, (cst, sst))
+            return carry + y, new_state
+
+        x, (tconv, tssm) = jax.lax.scan(
+            mamba_fn, x,
+            (tail_params, cache["conv"][n_groups * every :], cache["ssm"][n_groups * every :]),
+        )
+        new_conv = jnp.concatenate([new_conv, tconv], axis=0)
+        new_ssm = jnp.concatenate([new_ssm, tssm], axis=0)
+    x = apply_norm(cfg, x, params.get("final_norm"))
+    logits = (x[:, -1] @ _unembed_matrix(cfg, params).astype(x.dtype)).astype(jnp.float32)
+    new_cache = {"attn_k": ks, "attn_v": vs, "conv": new_conv, "ssm": new_ssm}
+    return logits, new_cache

@@ -1,0 +1,211 @@
+"""INT8 ResNet-18/50 -- the paper's own evaluation models (SS V).
+
+Runs convolutions as GEMMs through the Pallas kernels (im2col + int8_gemm)
+with power-of-two scaling, fused ReLU and fused residual additions, exactly
+the PU dataflow.  The max-pool is fused into post-processing (reduce_window
+on the int8 feature map) and the average-pool runs as a mean + requantize,
+consistent with the paper's choices.
+
+Also provides a float reference forward (dequantized weights) so the int8
+path and the AIMC noise studies have a baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor, quantize, requantize_i32
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    cin: int
+    cout: int
+    k: int
+    stride: int
+    pad: int
+    relu: bool
+    residual_from: Optional[str] = None   # fuse residual input tagged w/ name
+
+
+def resnet_conv_specs(variant: int) -> List[ConvSpec]:
+    """Per-layer conv specs (matching core/simulator.py's GEMM table)."""
+    specs: List[ConvSpec] = [ConvSpec("conv1", 3, 64, 7, 2, 3, relu=True)]
+    if variant == 18:
+        blocks, ch_list, cin, expansion = [2, 2, 2, 2], [64, 128, 256, 512], 64, 1
+        for s_i, (nb, ch) in enumerate(zip(blocks, ch_list)):
+            for b in range(nb):
+                stride = 2 if (s_i > 0 and b == 0) else 1
+                downsample = stride != 1 or cin != ch
+                specs.append(ConvSpec(f"s{s_i}b{b}c1", cin, ch, 3, stride, 1, relu=True))
+                specs.append(
+                    ConvSpec(
+                        f"s{s_i}b{b}c2", ch, ch, 3, 1, 1, relu=True,
+                        residual_from=(f"s{s_i}b{b}down" if downsample else "block_in"),
+                    )
+                )
+                if downsample:
+                    specs.append(ConvSpec(f"s{s_i}b{b}down", cin, ch, 1, stride, 0, relu=False))
+                cin = ch
+    elif variant == 50:
+        blocks, ch_list, cin, expansion = [3, 4, 6, 3], [64, 128, 256, 512], 64, 4
+        for s_i, (nb, ch) in enumerate(zip(blocks, ch_list)):
+            for b in range(nb):
+                stride = 2 if (s_i > 0 and b == 0) else 1
+                downsample = stride != 1 or cin != ch * 4
+                specs.append(ConvSpec(f"s{s_i}b{b}c1", cin, ch, 1, 1, 0, relu=True))
+                specs.append(ConvSpec(f"s{s_i}b{b}c2", ch, ch, 3, stride, 1, relu=True))
+                specs.append(
+                    ConvSpec(
+                        f"s{s_i}b{b}c3", ch, ch * 4, 1, 1, 0, relu=True,
+                        residual_from=(f"s{s_i}b{b}down" if downsample else "block_in"),
+                    )
+                )
+                if downsample:
+                    specs.append(ConvSpec(f"s{s_i}b{b}down", cin, ch * 4, 1, stride, 0, relu=False))
+                cin = ch * 4
+    else:
+        raise ValueError(variant)
+    return specs
+
+
+def feature_dim(variant: int) -> int:
+    return 512 if variant == 18 else 2048
+
+
+def init_params(variant: int, key, num_classes: int = 1000) -> dict:
+    """Random-initialized quantized parameters (weights QTensor, bias int32,
+
+    per-layer output shift).  Real deployments would load calibrated
+    checkpoints; numerics and dataflow are identical.
+    """
+    specs = resnet_conv_specs(variant)
+    params: Dict[str, dict] = {}
+    keys = jax.random.split(key, len(specs) + 1)
+    for spec, k in zip(specs, keys[:-1]):
+        fan_in = spec.k * spec.k * spec.cin
+        w = jax.random.normal(k, (spec.k, spec.k, spec.cin, spec.cout)) * (
+            2.0 / fan_in
+        ) ** 0.5
+        wq = quantize(w)
+        params[spec.name] = {
+            "w": wq,
+            "bias": jnp.zeros((spec.cout,), jnp.int32),
+            # requantize acc -> int8 on the same activation grid:
+            # shift = -e_w  (out_exp - (act_exp + w_exp) with out=act grid)
+            "shift": -wq.exp,
+        }
+    feat = feature_dim(variant)
+    wfc = jax.random.normal(keys[-1], (feat, num_classes)) * (1.0 / feat) ** 0.5
+    wq = quantize(wfc)
+    params["fc"] = {"w": wq, "bias": jnp.zeros((num_classes,), jnp.int32), "shift": -wq.exp}
+    return params
+
+
+def _maxpool_int8(x: jax.Array, k: int = 3, s: int = 2, p: int = 1) -> jax.Array:
+    xp = jnp.pad(x, ((p, p), (p, p), (0, 0)), constant_values=-128)
+    return jax.lax.reduce_window(
+        xp, jnp.int8(-128), jax.lax.max, (k, k, 1), (s, s, 1), "VALID"
+    )
+
+
+def forward_int8(
+    variant: int,
+    params: dict,
+    img: jax.Array,          # (H, W, 3) int8
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Single-image INT8 inference -> (num_classes,) int32 logits (acc grid)."""
+    specs = {s.name: s for s in resnet_conv_specs(variant)}
+    order = resnet_conv_specs(variant)
+
+    x = img
+    saved: Dict[str, jax.Array] = {}
+    i = 0
+    x = _apply_conv(params, order[0], x, None, interpret)
+    x = _maxpool_int8(x)
+    i = 1
+    block_in = x
+    pending_down: Dict[str, jax.Array] = {}
+    while i < len(order):
+        spec = order[i]
+        if spec.residual_from is None and spec.name.endswith("down"):
+            i += 1
+            continue
+        if spec.residual_from is not None:
+            # compute downsample branch first if needed
+            if spec.residual_from != "block_in":
+                dspec = specs[spec.residual_from]
+                res = _apply_conv(params, dspec, block_in, None, interpret)
+            else:
+                res = block_in
+            x = _apply_conv(params, spec, x, res, interpret)
+            block_in = x
+        else:
+            x = _apply_conv(params, spec, x, None, interpret)
+        i += 1
+
+    # global average pool (paper: executed as a conv layer; mean+requant here)
+    feat = jnp.mean(x.astype(jnp.int32), axis=(0, 1))        # (C,) on act grid
+    w = params["fc"]["w"]
+    logits = w.q.astype(jnp.int32).T @ feat + params["fc"]["bias"]
+    return logits
+
+
+def _apply_conv(params, spec: ConvSpec, x, residual, interpret):
+    p = params[spec.name]
+    return ops.conv2d_int8(
+        x, p["w"].q, p["bias"], k=spec.k, stride=spec.stride, pad=spec.pad,
+        shift=p["shift"], relu=spec.relu, residual=residual,
+        interpret=interpret,
+    )
+
+
+def forward_float(variant: int, params: dict, img: jax.Array) -> jax.Array:
+    """Float reference with dequantized weights (baseline for AIMC studies)."""
+    specs = {s.name: s for s in resnet_conv_specs(variant)}
+    order = resnet_conv_specs(variant)
+
+    def conv(spec: ConvSpec, x, residual=None):
+        w = params[spec.name]["w"].dequantize()
+        y = jax.lax.conv_general_dilated(
+            x[None].transpose(0, 3, 1, 2), w.transpose(3, 2, 0, 1),
+            (spec.stride, spec.stride), [(spec.pad, spec.pad)] * 2,
+        )[0].transpose(1, 2, 0)
+        if residual is not None:
+            y = y + residual
+        if spec.relu:
+            y = jax.nn.relu(y)
+        return y
+
+    x = conv(order[0], img.astype(jnp.float32))
+    x = jax.lax.reduce_window(
+        jnp.pad(x, ((1, 1), (1, 1), (0, 0)), constant_values=-jnp.inf),
+        -jnp.inf, jax.lax.max, (3, 3, 1), (2, 2, 1), "VALID",
+    )
+    block_in = x
+    i = 1
+    while i < len(order):
+        spec = order[i]
+        if spec.name.endswith("down") and spec.residual_from is None:
+            i += 1
+            continue
+        if spec.residual_from is not None:
+            if spec.residual_from != "block_in":
+                res = conv(specs[spec.residual_from], block_in)
+            else:
+                res = block_in
+            x = conv(spec, x, res)
+            block_in = x
+        else:
+            x = conv(spec, x)
+        i += 1
+    feat = jnp.mean(x, axis=(0, 1))
+    return feat @ params["fc"]["w"].dequantize()

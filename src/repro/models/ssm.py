@@ -1,0 +1,252 @@
+"""Mamba2 (SSD -- state-space duality) blocks: chunked quadratic-within-
+
+chunk / linear-across-chunk training form, and O(1)-state recurrent decode.
+
+Follows the discrete SSD formulation of arXiv:2405.21060 (the
+``ssd_minimal_discrete`` reference): within a chunk the output is an
+attention-like masked product C_i B_j^T with decay weights
+exp(A_cum_i - A_cum_j); across chunks a recurrent state (H, P, N) carries.
+This is the sub-quadratic path that makes ``long_500k`` runnable for the
+ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import rms_norm
+from repro.parallel.sharding import logical_constraint
+
+
+# ------------------------------------------------------------- params -----
+
+
+def ssm_params(cfg: ModelConfig, key) -> dict:
+    d, din = cfg.d_model, cfg.d_inner
+    n, h, k = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    g = 1  # single B/C group
+    conv_dim = din + 2 * g * n
+    keys = jax.random.split(key, 5)
+    init = jax.nn.initializers.normal(0.02)
+    return {
+        # order: [z (din), x (din), B (g*n), C (g*n), dt (h)]
+        "in_proj": init(keys[0], (d, 2 * din + 2 * g * n + h), jnp.float32),
+        "conv_w": init(keys[1], (k, conv_dim), jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.zeros((din,), jnp.float32),
+        "out_proj": init(keys[2], (din, d), jnp.float32),
+    }
+
+
+def ssm_axes(cfg: ModelConfig) -> dict:
+    return {
+        "in_proj": ("embed_d", "ff"),
+        "conv_w": ("conv", "ff"),
+        "conv_b": ("ff",),
+        "dt_bias": ("heads",),
+        "a_log": ("heads",),
+        "d_skip": ("heads",),
+        "norm": ("ff",),
+        "out_proj": ("ff", "embed_d"),
+    }
+
+
+# --------------------------------------------------------------- SSD ------
+
+
+def _ssd_chunked(
+    x: jax.Array,      # (B, S, H, P) -- already dt-scaled
+    a: jax.Array,      # (B, S, H)    -- log decay per step (A * dt, <= 0)
+    bmat: jax.Array,   # (B, S, N)
+    cmat: jax.Array,   # (B, S, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,   # (B, H, P, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+    xc = x.reshape(b, nc, q, h, p)
+    ac = a.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+
+    a_cum = jnp.cumsum(ac, axis=2)                       # (B, nc, Q, H)
+    a_tot = a_cum[:, :, -1]                              # (B, nc, H)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    att = jnp.einsum("bcin,bcjn->bcij", cc, bc,
+                     preferred_element_type=jnp.float32)  # (B,nc,Q,Q)
+    decay = jnp.exp(a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :])  # (B,nc,Q,Q,H)
+    ii = jnp.arange(q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    w = jnp.where(causal, att[..., None] * decay, 0.0)
+    w = logical_constraint(w, "batch", None, None, None, "heads")
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", w.astype(x.dtype), xc,
+                        preferred_element_type=jnp.float32)
+
+    # --- chunk states ---
+    state_decay = jnp.exp(a_tot[:, :, None, :] - a_cum)  # (B,nc,Q,H)
+    states = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchpn",
+        bc, state_decay.astype(x.dtype), xc,
+        preferred_element_type=jnp.float32,
+    )                                                     # (B,nc,H,P,N)
+
+    # --- inter-chunk recurrence ---
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def scan_fn(carry, inp):
+        st, atot = inp                                    # (B,H,P,N), (B,H)
+        new = carry * jnp.exp(atot)[:, :, None, None] + st
+        return new, carry                                 # emit state *before* chunk
+
+    states_t = states.swapaxes(0, 1)                      # (nc, B, H, P, N)
+    atot_t = a_tot.swapaxes(0, 1).astype(jnp.float32)     # (nc, B, H)
+    h_final, h_prev = jax.lax.scan(scan_fn, h0, (states_t, atot_t))
+    h_prev = h_prev.swapaxes(0, 1)                        # (B, nc, H, P, N)
+
+    # --- inter-chunk contribution ---
+    out_decay = jnp.exp(a_cum)                            # (B,nc,Q,H)
+    y_off = jnp.einsum(
+        "bcin,bcih,bchpn->bcihp",
+        cc, out_decay.astype(x.dtype), h_prev.astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_diag + y_off).reshape(b, nc * q, h, p)[:, :s]
+    return y.astype(x.dtype), h_final
+
+
+def _depthwise_conv(
+    u: jax.Array,        # (B, S, C)
+    w: jax.Array,        # (K, C)
+    bias: jax.Array,     # (C,)
+) -> jax.Array:
+    k = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    y = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(k):
+        y = y + up[:, i : i + u.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (y + bias.astype(jnp.float32)).astype(u.dtype)
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :din]
+    xbc = proj[..., din : din + din + 2 * n]
+    dt = proj[..., din + din + 2 * n :]
+    return z, xbc, dt
+
+
+def ssm_apply(
+    cfg: ModelConfig,
+    p: dict,
+    x_in: jax.Array,                       # (B, S, D)
+    state: Optional[Tuple[jax.Array, jax.Array]] = None,  # (conv (B,K-1,Cc), ssm (B,H,P,N))
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Full-sequence (chunked SSD) Mamba2 block.
+
+    With ``state`` given, also returns the updated (conv, ssm) state for
+    streaming prefill -> decode handoff.
+    """
+    b, s, _ = x_in.shape
+    din, n, heads, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    dt_type = x_in.dtype
+
+    proj = x_in @ p["in_proj"].astype(dt_type)
+    z, xbc_raw, dt = _split_proj(cfg, proj)
+    xbc = _depthwise_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xbc = logical_constraint(xbc, "batch", None, "ff")
+    xs = xbc[..., :din].reshape(b, s, heads, pdim)
+    bmat = xbc[..., din : din + n]
+    cmat = xbc[..., din + n :]
+
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                        # (H,)
+    a_dt = a * dt_f                                                 # (B,S,H)
+    x_dt = xs * dt_f[..., None].astype(dt_type)
+
+    h0 = state[1] if state is not None else None
+    y, h_final = _ssd_chunked(x_dt, a_dt, bmat, cmat, cfg.ssm_chunk, h0)
+    y = y + xs * p["d_skip"].astype(dt_type)[None, None, :, None]
+    y = y.reshape(b, s, din)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_type), p["norm"])
+    out = y @ p["out_proj"].astype(dt_type)
+
+    new_state = None
+    if state is not None:
+        k = cfg.ssm_conv
+        tail = xbc_raw[:, -(k - 1):] if s >= k - 1 else jnp.concatenate(
+            [state[0][:, s:], xbc_raw], axis=1
+        )
+        new_state = (tail.astype(state[0].dtype), h_final)
+    return out, new_state
+
+
+def ssm_decode_step(
+    cfg: ModelConfig,
+    p: dict,
+    x_in: jax.Array,                 # (B, 1, D)
+    state: Tuple[jax.Array, jax.Array],
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """O(1) recurrent update: h' = h * exp(a*dt) + dt*x (x) B;  y = C.h' + D*x."""
+    b = x_in.shape[0]
+    din, n, heads, pdim, k = (
+        cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+    )
+    dt_type = x_in.dtype
+    conv_state, h = state
+
+    proj = x_in[:, 0] @ p["in_proj"].astype(dt_type)                # (B, ...)
+    z, xbc_new, dt = _split_proj(cfg, proj[:, None, :])
+    z, xbc_new, dt = z[:, 0], xbc_new[:, 0], dt[:, 0]
+
+    # causal depthwise conv over the rolling (K-1)-deep window
+    window = jnp.concatenate([conv_state, xbc_new[:, None, :]], axis=1)  # (B,K,Cc)
+    conv = jnp.sum(
+        window.astype(jnp.float32) * p["conv_w"][None], axis=1
+    ) + p["conv_b"]
+    xbc = jax.nn.silu(conv).astype(dt_type)
+    xs = xbc[:, :din].reshape(b, heads, pdim)
+    bmat = xbc[:, din : din + n]
+    cmat = xbc[:, din + n :]
+
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(a * dt_f)                                       # (B,H)
+    x_dt = xs.astype(jnp.float32) * dt_f[..., None]                 # (B,H,P)
+    h_new = h * decay[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", x_dt, bmat.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h_new, cmat.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, din).astype(dt_type)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_type), p["norm"])
+    out = (y @ p["out_proj"].astype(dt_type))[:, None, :]           # (B,1,D)
+
+    new_conv_state = window[:, 1:].astype(conv_state.dtype)
+    return out, (new_conv_state, h_new)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return (
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dt),
+        jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    )

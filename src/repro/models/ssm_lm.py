@@ -1,0 +1,136 @@
+"""Mamba2 decoder-only LM (attention-free): embed -> scanned SSD blocks ->
+
+norm -> unembed.  Decode carries (conv, ssm) states per layer; there is no
+KV cache, which is exactly why long_500k runs for this family.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.common import apply_norm, chunked_softmax_xent, norm_axes, norm_params
+from repro.parallel.sharding import logical_constraint
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _layer(cfg, key):
+    k1, k2 = jax.random.split(key)
+    return {"norm": norm_params(cfg, cfg.d_model, k1), "ssm": ssm_mod.ssm_params(cfg, k2)}
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, 3 + cfg.n_layers)
+    init = jax.nn.initializers.normal(0.02)
+    params = {
+        "embed": init(keys[0], (cfg.vocab, cfg.d_model), jnp.float32),
+        "final_norm": norm_params(cfg, cfg.d_model, keys[1]),
+        "layers": jax.vmap(lambda k: _layer(cfg, k))(jnp.stack(keys[3:])),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init(keys[2], (cfg.d_model, cfg.vocab), jnp.float32)
+    return params
+
+
+def param_axes(cfg: ModelConfig) -> dict:
+    is_ax_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+    layer_ax = jax.tree.map(
+        lambda ax: ("layers",) + ax,
+        {"norm": norm_axes(cfg), "ssm": ssm_mod.ssm_axes(cfg)},
+        is_leaf=is_ax_leaf,
+    )
+    axes = {
+        "embed": ("vocab", "embed_d"),
+        "final_norm": norm_axes(cfg),
+        "layers": layer_ax,
+    }
+    if not cfg.tie_embeddings:
+        axes["unembed"] = ("embed_d", "vocab")
+    return axes
+
+
+def _unembed_matrix(cfg, params):
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def forward_hidden(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+    x = logical_constraint(x, "batch", "seq", "d_model")
+
+    def body(x, lp):
+        h = apply_norm(cfg, x, lp.get("norm"))
+        y, _ = ssm_mod.ssm_apply(cfg, lp["ssm"], h, None)
+        return x + y, None
+
+    if cfg.remat == "layer":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return apply_norm(cfg, x, params.get("final_norm"))
+
+
+def train_loss(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    hidden = forward_hidden(cfg, params, batch["tokens"])
+    return chunked_softmax_xent(
+        hidden, _unembed_matrix(cfg, params), batch["labels"], batch.get("mask")
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    dt = _dtype(cfg)
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim), dt),
+        "ssm": jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        ),
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    return {
+        "conv": ("layers", "batch", None, "ff"),
+        "ssm": ("layers", "batch", "heads", None, None),
+    }
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array):
+    """Chunked-SSD pass that also returns the final recurrent states."""
+    b, s = tokens.shape
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+    x = logical_constraint(x, "batch", "seq", "d_model")
+    st0 = ssm_mod.init_ssm_state(cfg, b)
+
+    def body(x, lp):
+        h = apply_norm(cfg, x, lp.get("norm"))
+        y, st = ssm_mod.ssm_apply(cfg, lp["ssm"], h, st0)
+        return x + y, st
+
+    x, (convs, ssms) = jax.lax.scan(body, x, params["layers"])
+    x = apply_norm(cfg, x, params.get("final_norm"))
+    logits = (x[:, -1] @ _unembed_matrix(cfg, params).astype(x.dtype)).astype(jnp.float32)
+    return logits, {"conv": convs.astype(_dtype(cfg)), "ssm": ssms}
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array, pos: jax.Array):
+    del pos  # SSM state is position-free
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+
+    def body(x, xs):
+        lp, cst, sst = xs
+        h = apply_norm(cfg, x, lp.get("norm"))
+        y, st = ssm_mod.ssm_decode_step(cfg, lp["ssm"], h, (cst, sst))
+        return x + y, st
+
+    x, (convs, ssms) = jax.lax.scan(body, x, (params["layers"], cache["conv"], cache["ssm"]))
+    x = apply_norm(cfg, x, params.get("final_norm"))
+    logits = (x[:, -1] @ _unembed_matrix(cfg, params).astype(x.dtype)).astype(jnp.float32)
+    return logits, {"conv": convs, "ssm": ssms}

@@ -1,0 +1,19 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cast_params_bf16,
+    cosine_schedule,
+    global_norm,
+    opt_state_axes,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cast_params_bf16",
+    "cosine_schedule",
+    "global_norm",
+    "opt_state_axes",
+]

@@ -1,0 +1,24 @@
+"""Distribution layer: logical-axis sharding rules, pipeline parallelism,
+
+gradient compression.  Models never name mesh axes directly; they annotate
+logical axes and the active rule-set maps those onto the mesh (DESIGN.md SS5).
+"""
+from repro.parallel.sharding import (
+    RULES_FSDP_TP,
+    RULES_DP_ONLY,
+    RULES_TP_HEAVY,
+    activation_sharding_ctx,
+    logical_constraint,
+    resolve_spec,
+    specs_for_tree,
+)
+
+__all__ = [
+    "RULES_FSDP_TP",
+    "RULES_DP_ONLY",
+    "RULES_TP_HEAVY",
+    "activation_sharding_ctx",
+    "logical_constraint",
+    "resolve_spec",
+    "specs_for_tree",
+]

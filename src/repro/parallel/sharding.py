@@ -1,0 +1,240 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical tensor axes
+
+(e.g. "batch", "d_model", "ff", "heads") onto mesh axes ("pod", "data",
+"model").  A rule maps one logical name to one or more mesh axes; axes
+missing from the active mesh are dropped (the same config runs single-pod
+(data, model) and multi-pod (pod, data, model)), and axes that do not divide
+the dimension are dropped at resolve time with a warning counter (GSPMD
+would otherwise pad unevenly).
+
+Models call :func:`logical_constraint` on activations and expose a logical
+axes pytree for params; the launcher resolves both against the mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LogicalAxis = Union[str, None]
+Rules = Tuple[Tuple[str, Tuple[str, ...]], ...]
+
+
+def _norm(rules) -> Rules:
+    out = []
+    for name, axes in rules:
+        if isinstance(axes, str):
+            axes = (axes,)
+        out.append((name, tuple(axes)))
+    return tuple(out)
+
+
+# Default: 2D FSDP + TP (+ pod-level DP), sequence parallelism on the
+# residual stream.  "batch" shards over pod+data; weight d_model dims shard
+# over data (ZeRO-3); ff/heads/vocab shard over model (Megatron TP);
+# sequence of the residual stream shards over model (SP) -- GSPMD inserts
+# the all-gather / reduce-scatter pairs at the TP boundaries.
+RULES_FSDP_TP: Rules = _norm(
+    (
+        ("batch", ("pod", "data")),
+        ("seq", ("model",)),          # sequence parallelism (activations)
+        ("kv_seq", ("model",)),       # decode KV cache sharded along length
+        ("loss_vocab", ("model",)),   # vocab-parallel chunked loss
+        ("loss_embed_d", ()),
+        ("d_model", ()),              # activation feature dim: replicated
+        ("embed_d", ("data",)),       # weight d_model dim: FSDP
+        ("vocab", ("model",)),
+        ("ff", ("model",)),
+        ("heads", ("model",)),
+        ("kv_heads", ("model",)),
+        ("qkv_d", ("data",)),         # weight input dim of attn projections
+        ("experts", ()),
+        ("expert_cap", ("data",)),
+        ("layers", ()),
+        ("conv", ()),
+        ("state", ()),
+    )
+)
+
+# Pure data parallelism (small models / debug).
+RULES_DP_ONLY: Rules = _norm(
+    (
+        ("batch", ("pod", "data", "model")),
+        ("seq", ()), ("kv_seq", ()), ("d_model", ()), ("embed_d", ()),
+        ("loss_vocab", ()), ("loss_embed_d", ()),
+        ("vocab", ()), ("ff", ()), ("heads", ()), ("kv_heads", ()),
+        ("qkv_d", ()), ("experts", ()), ("expert_cap", ()), ("layers", ()),
+        ("conv", ()), ("state", ()),
+    )
+)
+
+# TP-heavy: everything feature-ish on model, batch on pod+data, no FSDP --
+# a hillclimb alternative trading parameter all-gathers for activation
+# collectives.
+RULES_TP_HEAVY: Rules = _norm(
+    (
+        ("batch", ("pod", "data")),
+        ("seq", ()), ("kv_seq", ("model",)),
+        ("d_model", ()), ("embed_d", ()),
+        ("loss_vocab", ("model",)), ("loss_embed_d", ()),
+        ("vocab", ("model",)), ("ff", ("model",)), ("heads", ("model",)),
+        ("kv_heads", ("model",)), ("qkv_d", ()),
+        ("experts", ()), ("expert_cap", ("data",)), ("layers", ()),
+        ("conv", ()), ("state", ()),
+    )
+)
+
+# ZeRO-3 pure data parallelism: batch over EVERY mesh axis (256/512-way),
+# parameters + optimizer state sharded 256-way along their d_model dim,
+# activations never feature-sharded.  Hypothesis (EXPERIMENTS.md SSPerf):
+# training cells are dominated by TP activation all-reduces (activations
+# are (per-device-batch x seq x d_model) and recur every layer); ZeRO-3
+# replaces them with per-layer parameter all-gathers, whose bytes are
+# batch-independent and ~10x smaller at train_4k scale.
+RULES_ZERO3_DP: Rules = _norm(
+    (
+        ("batch", ("pod", "data", "model")),
+        ("seq", ()), ("kv_seq", ()),
+        ("d_model", ()),
+        ("embed_d", ("data", "model")),   # params/opt sharded 256-way
+        ("qkv_d", ("data", "model")),
+        # loss-time unembed: replicate ONCE before the chunk scan (the
+        # gather is hoisted out of the loop -- SSPerf iteration 3)
+        ("loss_vocab", ()), ("loss_embed_d", ()),
+        ("vocab", ()), ("ff", ()), ("heads", ()), ("kv_heads", ()),
+        ("experts", ()), ("expert_cap", ()), ("layers", ()),
+        ("conv", ()), ("state", ()),
+    )
+)
+
+# zero3_dp variant for MoE: the (experts, capacity, d_model) dispatch
+# buffer must stay sharded -- replicating it turns every scatter into a
+# full-buffer all-reduce (measured 3.4x WORSE than fsdp_tp on granite;
+# see EXPERIMENTS.md SSPerf iteration 2).  Sharding capacity 256-ways makes
+# dispatch an all-to-all of the token features instead.
+RULES_ZERO3_MOE: Rules = _norm(
+    tuple(
+        (name, ("data", "model")) if name == "expert_cap" else (name, axes)
+        for name, axes in RULES_ZERO3_DP
+    )
+)
+
+NAMED_RULES = {
+    "fsdp_tp": RULES_FSDP_TP,
+    "dp_only": RULES_DP_ONLY,
+    "tp_heavy": RULES_TP_HEAVY,
+    "zero3_dp": RULES_ZERO3_DP,
+    "zero3_moe": RULES_ZERO3_MOE,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[Rules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def activation_sharding_ctx(mesh: Optional[Mesh], rules: Optional[Rules]):
+    """Activate (mesh, rules) for logical_constraint inside model code."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, _norm(rules) if rules else None
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def _axes_for(name: Optional[str], rules: Rules, mesh: Mesh) -> Tuple[str, ...]:
+    if name is None:
+        return ()
+    for rule_name, axes in rules:
+        if rule_name == name:
+            return tuple(a for a in axes if a in mesh.axis_names)
+    return ()
+
+
+def resolve_spec(
+    logical: Sequence[LogicalAxis],
+    mesh: Mesh,
+    rules: Rules,
+    dims: Optional[Sequence[int]] = None,
+) -> P:
+    """Map a logical axes tuple to a PartitionSpec on ``mesh``.
+
+    When ``dims`` is given, mesh axes whose size does not divide the
+    corresponding dim are dropped (keeps lowering legal for any config).
+    """
+    rules = _norm(rules)
+    used = set()
+    parts = []
+    for i, name in enumerate(logical):
+        axes = [a for a in _axes_for(name, rules, mesh) if a not in used]
+        if dims is not None and axes:
+            keep = []
+            size = dims[i]
+            for a in axes:
+                asize = mesh.shape[a]
+                if size % (asize * _prod(mesh.shape[k] for k in keep)) == 0:
+                    keep.append(a)
+            axes = keep
+        for a in axes:
+            used.add(a)
+        if not axes:
+            parts.append(None)
+        elif len(axes) == 1:
+            parts.append(axes[0])
+        else:
+            parts.append(tuple(axes))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def _prod(it) -> int:
+    out = 1
+    for x in it:
+        out *= x
+    return out
+
+
+def logical_constraint(x: jax.Array, *logical: LogicalAxis) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op outside ctx)."""
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None or rules is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"{len(logical)} names for rank-{x.ndim} tensor")
+    spec = resolve_spec(logical, mesh, rules, dims=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def specs_for_tree(logical_tree, mesh: Mesh, rules: Rules, shapes=None):
+    """Resolve a pytree of logical-axes tuples to NamedShardings.
+
+    ``logical_tree`` leaves are tuples of logical names; ``shapes`` (an
+    eval_shape pytree of the same structure) enables divisibility checks.
+    """
+    is_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+    if shapes is None:
+        return jax.tree.map(
+            lambda ax: NamedSharding(mesh, resolve_spec(ax, mesh, rules)),
+            logical_tree,
+            is_leaf=is_leaf,
+        )
+    return jax.tree.map(
+        lambda ax, sh: NamedSharding(
+            mesh, resolve_spec(ax, mesh, rules, dims=sh.shape)
+        ),
+        logical_tree,
+        shapes,
+        is_leaf=is_leaf,
+    )

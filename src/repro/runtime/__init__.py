@@ -1,0 +1,4 @@
+"""Distributed runtime: step factories, fault-tolerant train loop,
+
+batched serving engine with the paper's weight-streaming scheduler.
+"""

@@ -1,0 +1,261 @@
+"""Step factories shared by the dry-run, the train loop and the servers.
+
+Each factory returns (step_fn, abstract_inputs, in_shardings, out_shardings)
+for a (config, shape, mesh, rules) cell, so the launchers and the dry-run
+lower exactly the same computation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api as model_api
+from repro.optim import AdamWConfig, adamw_init, adamw_update, opt_state_axes
+from repro.parallel.sharding import (
+    activation_sharding_ctx,
+    resolve_spec,
+    specs_for_tree,
+)
+
+
+def abstract_params(cfg: ModelConfig, api) -> Any:
+    return jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    rules,
+    opt_cfg: Optional[AdamWConfig] = None,
+    accum_steps: int = 1,
+):
+    """train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With ``opt_cfg.master_weights`` the live params are bf16 (halving the
+    ZeRO-3 parameter all-gather bytes) and the f32 master copy lives in the
+    sharded optimizer state.
+
+    ``accum_steps > 1`` splits the global batch into microbatches scanned
+    inside the step (gradient accumulation in f32): live activation memory
+    scales ~1/accum_steps while the optimizer sees the same global batch --
+    the memory-feasibility lever for train cells whose activations exceed
+    per-chip HBM (EXPERIMENTS.md SSPerf memory pass).
+    """
+    from repro.optim import cast_params_bf16
+
+    api = model_api.get_api(cfg)
+    opt_cfg = opt_cfg or AdamWConfig()
+    mw = opt_cfg.master_weights
+    assert shape.global_batch % accum_steps == 0, (shape.global_batch, accum_steps)
+
+    def _loss(p, b):
+        with activation_sharding_ctx(mesh, rules):
+            return jax.value_and_grad(
+                lambda q: api.train_loss(cfg, q, b)
+            )(p)
+
+    if accum_steps == 1:
+
+        def train_step(params, opt_state, batch):
+            loss, grads = _loss(params, batch)
+            new_params, new_opt, metrics = adamw_update(
+                opt_cfg, grads, opt_state, params
+            )
+            metrics = dict(metrics, loss=loss)
+            return new_params, new_opt, metrics
+
+    else:
+
+        def train_step(params, opt_state, batch):
+            mb = jax.tree.map(
+                lambda x: x.reshape(
+                    (accum_steps, x.shape[0] // accum_steps) + x.shape[1:]
+                ),
+                batch,
+            )
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def body(carry, mbatch):
+                loss_sum, gsum = carry
+                loss, grads = _loss(params, mbatch)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads
+                )
+                return (loss_sum + loss, gsum), None
+
+            (loss_sum, gsum), _ = jax.lax.scan(body, (0.0, g0), mb)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            new_params, new_opt, metrics = adamw_update(
+                opt_cfg, grads, opt_state, params
+            )
+            metrics = dict(metrics, loss=loss_sum / accum_steps)
+            return new_params, new_opt, metrics
+
+    params_s = abstract_params(cfg, api)
+    if mw:
+        params_s = jax.eval_shape(cast_params_bf16, params_s)
+    opt_s = jax.eval_shape(
+        functools.partial(adamw_init, master_weights=mw), params_s
+    )
+    batch_s = model_api.batch_struct(cfg, shape)
+
+    p_axes = api.param_axes(cfg)
+    p_shard = specs_for_tree(p_axes, mesh, rules, params_s)
+    o_shard = specs_for_tree(
+        opt_state_axes(p_axes, master_weights=mw), mesh, rules, opt_s
+    )
+    b_shard = specs_for_tree(model_api.batch_axes(cfg, shape), mesh, rules, batch_s)
+    scalar = _named(mesh, P())
+    m_shard = {"lr": scalar, "grad_norm": scalar, "step": scalar, "loss": scalar}
+
+    return (
+        train_step,
+        (params_s, opt_s, batch_s),
+        (p_shard, o_shard, b_shard),
+        (p_shard, o_shard, m_shard),
+    )
+
+
+def make_compressed_train_step(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    rules,
+    opt_cfg: Optional[AdamWConfig] = None,
+):
+    """train_step with int8 error-feedback gradient compression.
+
+    State gains an ``ef`` tree (error feedback, shards like params); the
+    gradient all-reduce inside the jit carries int8 payloads -- 4x fewer
+    wire bytes than f32 master grads (see parallel/compression.py).
+    """
+    from repro.parallel.compression import compressed_grads, init_error_state
+
+    api = model_api.get_api(cfg)
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, ef, batch):
+        with activation_sharding_ctx(mesh, rules):
+            loss, grads = jax.value_and_grad(
+                lambda p: api.train_loss(cfg, p, batch)
+            )(params)
+        grads, ef = compressed_grads(grads, ef)
+        new_params, new_opt, metrics = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, ef, metrics
+
+    params_s = abstract_params(cfg, api)
+    opt_s = jax.eval_shape(adamw_init, params_s)
+    ef_s = jax.eval_shape(init_error_state, params_s)
+    batch_s = model_api.batch_struct(cfg, shape)
+
+    p_axes = api.param_axes(cfg)
+    p_shard = specs_for_tree(p_axes, mesh, rules, params_s)
+    o_shard = specs_for_tree(opt_state_axes(p_axes), mesh, rules, opt_s)
+    e_shard = specs_for_tree(p_axes, mesh, rules, ef_s)
+    b_shard = specs_for_tree(model_api.batch_axes(cfg, shape), mesh, rules, batch_s)
+    scalar = _named(mesh, P())
+    m_shard = {"lr": scalar, "grad_norm": scalar, "step": scalar, "loss": scalar}
+
+    return (
+        train_step,
+        (params_s, opt_s, ef_s, batch_s),
+        (p_shard, o_shard, e_shard, b_shard),
+        (p_shard, o_shard, e_shard, m_shard),
+    )
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules):
+    """prefill(params, batch) -> (logits, cache)."""
+    api = model_api.get_api(cfg)
+
+    def prefill(params, batch):
+        with activation_sharding_ctx(mesh, rules):
+            return api.prefill(cfg, params, batch)
+
+    params_s = abstract_params(cfg, api)
+    batch_s = model_api.batch_struct(cfg, shape)
+    p_shard = specs_for_tree(api.param_axes(cfg), mesh, rules, params_s)
+    b_shard = specs_for_tree(model_api.batch_axes(cfg, shape), mesh, rules, batch_s)
+
+    cache_s = jax.eval_shape(
+        lambda p, b: api.prefill(cfg, p, b)[1], params_s, batch_s
+    )
+    c_shard = specs_for_tree(api.cache_axes(cfg), mesh, rules, cache_s)
+    logits_shard = _named(
+        mesh,
+        resolve_spec(
+            ("batch", "vocab"), mesh, rules,
+            dims=(shape.global_batch, cfg.vocab),
+        ),
+    )
+
+    return (
+        prefill,
+        (params_s, batch_s),
+        (p_shard, b_shard),
+        (logits_shard, c_shard),
+    )
+
+
+def make_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules):
+    """decode(params, cache, tokens, pos) -> (logits, cache)."""
+    api = model_api.get_api(cfg)
+
+    def decode(params, cache, tokens, pos):
+        with activation_sharding_ctx(mesh, rules):
+            return api.decode_step(cfg, params, cache, tokens, pos)
+
+    params_s = abstract_params(cfg, api)
+    cache_s, tokens_s, pos_s = model_api.decode_inputs_struct(cfg, shape)
+    p_shard = specs_for_tree(api.param_axes(cfg), mesh, rules, params_s)
+    c_shard = specs_for_tree(api.cache_axes(cfg), mesh, rules, cache_s)
+    t_shard = _named(
+        mesh,
+        resolve_spec(("batch", None), mesh, rules, dims=(shape.global_batch, 1)),
+    )
+    pos_shard = _named(mesh, P())
+    logits_shard = _named(
+        mesh,
+        resolve_spec(
+            ("batch", "vocab"), mesh, rules,
+            dims=(shape.global_batch, cfg.vocab),
+        ),
+    )
+
+    return (
+        decode,
+        (params_s, cache_s, tokens_s, pos_s),
+        (p_shard, c_shard, t_shard, pos_shard),
+        (logits_shard, c_shard),
+    )
+
+
+def make_step(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    rules,
+    opt_cfg: Optional[AdamWConfig] = None,
+    accum_steps: int = 1,
+):
+    """Dispatch on the shape kind (train / prefill / decode)."""
+    if shape.kind == "train":
+        return make_train_step(cfg, shape, mesh, rules, opt_cfg, accum_steps)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape, mesh, rules)
+    if shape.kind == "decode":
+        return make_decode_step(cfg, shape, mesh, rules)
+    raise ValueError(shape.kind)

@@ -1,0 +1,94 @@
+"""AIMC noise-injection unit (paper SS VI): fresh noise each round,
+pristine weights untouched, statistics in the modeled band."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aimc import (
+    AIMCNoiseModel,
+    NoiseInjectionUnit,
+    inject_noise_float,
+    snr_db,
+)
+from repro.core.quant import QTensor, quantize
+
+
+def test_fresh_noise_each_round(key):
+    w = {"layer": {"w": jax.random.normal(key, (32, 32))}}
+    niu = NoiseInjectionUnit(w, AIMCNoiseModel())
+    a = niu.refresh(jax.random.PRNGKey(1))
+    b = niu.refresh(jax.random.PRNGKey(2))
+    assert float(jnp.max(jnp.abs(a["layer"]["w"] - b["layer"]["w"]))) > 0
+    # pristine copy untouched
+    np.testing.assert_array_equal(
+        np.asarray(niu.pristine["layer"]["w"]), np.asarray(w["layer"]["w"])
+    )
+
+
+def test_same_key_is_deterministic(key):
+    w = {"w": jax.random.normal(key, (16, 16))}
+    niu = NoiseInjectionUnit(w, AIMCNoiseModel())
+    a = niu.refresh(jax.random.PRNGKey(7))
+    b = niu.refresh(jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+
+
+def test_noise_statistics_match_model(key):
+    """Programming-noise std ~ scale * (0.25|w| + 0.05 w_max) at the
+    large-sample limit (drift/read disabled)."""
+    model = AIMCNoiseModel(prog_noise_scale=0.1, read_noise_scale=0.0, drift_nu=0.0)
+    w = jnp.ones((400, 400))
+    noisy = inject_noise_float(w, key, model)
+    err = np.asarray(noisy - w)
+    expected_sigma = 0.1 * (0.25 * 1.0 + 0.05 * 1.0)
+    assert err.std() == pytest.approx(expected_sigma, rel=0.05)
+    assert abs(err.mean()) < 3 * expected_sigma / np.sqrt(err.size) * 2
+
+
+def test_drift_shrinks_weights(key):
+    model = AIMCNoiseModel(prog_noise_scale=0.0, read_noise_scale=0.0,
+                           drift_nu=0.06, t_read=3600.0, t0=20.0)
+    w = jnp.ones((64, 64)) * 2.0
+    noisy = inject_noise_float(w, key, model)
+    factor = (3600.0 / 20.0) ** (-0.06)
+    np.testing.assert_allclose(np.asarray(noisy), 2.0 * factor, rtol=1e-6)
+    assert factor < 1.0
+
+
+def test_qtensor_leaves_requantized_on_same_grid(key):
+    wq = quantize(jax.random.normal(key, (32, 32)))
+    niu = NoiseInjectionUnit({"w": wq}, AIMCNoiseModel())
+    out = niu.refresh(jax.random.PRNGKey(3))
+    assert isinstance(out["w"], QTensor)
+    # exponent (the power-of-two grid) unchanged -- NIU overwrites payload
+    assert int(out["w"].exp) == int(wq.exp)
+    assert bool(jnp.any(out["w"].q != wq.q))
+
+
+def test_biases_and_vectors_stay_digital(key):
+    params = {
+        "w": jax.random.normal(key, (8, 8)),
+        "bias": jnp.ones((8,)),
+        "norm_scale": jnp.ones((8,)),
+    }
+    niu = NoiseInjectionUnit(params, AIMCNoiseModel())
+    out = niu.refresh(jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(out["bias"]), np.asarray(params["bias"]))
+    np.testing.assert_array_equal(
+        np.asarray(out["norm_scale"]), np.asarray(params["norm_scale"])
+    )
+    assert bool(jnp.any(out["w"] != params["w"]))
+
+
+def test_snr_decreases_with_noise_scale(key):
+    w = jax.random.normal(key, (64, 64))
+    lo = inject_noise_float(w, key, AIMCNoiseModel(prog_noise_scale=0.02))
+    hi = inject_noise_float(w, key, AIMCNoiseModel(prog_noise_scale=0.4))
+    assert float(snr_db(w, lo)) > float(snr_db(w, hi))
+
+
+def test_disabled_model_detected():
+    assert not AIMCNoiseModel(0.0, 0.0, 0.0).enabled()
+    assert AIMCNoiseModel().enabled()

@@ -1,0 +1,87 @@
+"""Checkpointing: atomicity, retention, async error surfacing, restore."""
+import json
+import shutil
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+
+
+def _state(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {
+        "params": {"w": jax.random.normal(k1, (8, 4)) * scale,
+                   "b": jnp.zeros((4,))},
+        "opt": {"m": jax.random.normal(k2, (8, 4)), "step": jnp.int32(3)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path, key):
+    state = _state(key)
+    save(tmp_path, 10, state, extra={"next_step": 10})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored, extra = restore(tmp_path, like)
+    assert extra == {"next_step": 10}
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_ignores_incomplete(tmp_path, key):
+    save(tmp_path, 5, _state(key))
+    # a crashed write: directory without manifest
+    (tmp_path / "step_00000009").mkdir()
+    (tmp_path / "step_00000009" / "arrays.npz").write_bytes(b"junk")
+    assert latest_step(tmp_path) == 5
+
+
+def test_shape_mismatch_rejected(tmp_path, key):
+    save(tmp_path, 1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore(tmp_path, {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)})
+
+
+def test_missing_key_rejected(tmp_path, key):
+    save(tmp_path, 1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(KeyError):
+        restore(tmp_path, {"other": jax.ShapeDtypeStruct((4, 4), jnp.float32)})
+
+
+def test_retention_gc(tmp_path, key):
+    mgr = CheckpointManager(tmp_path, keep=2, async_write=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(key, scale=s))
+    steps = sorted(
+        int(d.name.split("_")[1]) for d in tmp_path.iterdir()
+        if d.name.startswith("step_")
+    )
+    assert steps == [3, 4]
+
+
+def test_async_write_and_wait(tmp_path, key):
+    mgr = CheckpointManager(tmp_path, keep=3, async_write=True)
+    mgr.save(7, _state(key))
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+def test_async_error_surfaces(tmp_path, key):
+    mgr = CheckpointManager(tmp_path / "sub", async_write=True)
+    # poison the target: a *file* where the directory must go
+    (tmp_path / "sub").write_text("not a dir")
+    mgr.save(1, _state(key))
+    with pytest.raises(Exception):
+        mgr.wait()
+
+
+def test_overwrite_same_step_is_atomic(tmp_path, key):
+    save(tmp_path, 3, {"w": jnp.zeros((2,))})
+    save(tmp_path, 3, {"w": jnp.ones((2,))})
+    restored, _ = restore(
+        tmp_path, {"w": jax.ShapeDtypeStruct((2,), jnp.float32)}, step=3
+    )
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.ones((2,)))

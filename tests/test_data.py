@@ -1,0 +1,76 @@
+"""Data pipeline: determinism, exact restartability, elastic sharding."""
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, SyntheticLMDataset, TokenFileDataset, build_dataset, shard_batch
+
+
+CFG = DataConfig(seq_len=64, global_batch=8, vocab=512, seed=3)
+
+
+def test_batch_is_pure_function_of_step():
+    ds1, ds2 = SyntheticLMDataset(CFG), SyntheticLMDataset(CFG)
+    for step in (0, 5, 1000):
+        a, b = ds1.batch(step), ds2.batch(step)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_different_steps_different_batches():
+    ds = SyntheticLMDataset(CFG)
+    assert not np.array_equal(ds.batch(0)["tokens"], ds.batch(1)["tokens"])
+
+
+def test_labels_are_next_tokens():
+    ds = SyntheticLMDataset(CFG)
+    b = ds.batch(0)
+    assert b["tokens"].shape == (8, 64)
+    assert b["labels"].shape == (8, 64)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < CFG.vocab
+
+
+def test_bigram_structure_present():
+    """Even positions follow the deterministic bigram map -- the learnable
+    structure that makes train-loss decrease meaningful."""
+    ds = SyntheticLMDataset(CFG)
+    b = ds.batch(0)
+    full = np.concatenate([b["tokens"], b["labels"][:, -1:]], axis=1)
+    hits = 0
+    total = 0
+    for i in range(1, 64, 2):   # positions where the follow-rule applied
+        pred = (full[:, i] * 31 + 7) % CFG.bigram_period % CFG.vocab
+        hits += int((full[:, i + 1] == pred).sum())
+        total += full.shape[0]
+    assert hits / total > 0.9
+
+
+def test_shard_batch_partitions_rows():
+    ds = SyntheticLMDataset(CFG)
+    b = ds.batch(0)
+    parts = [shard_batch(b, i, 4) for i in range(4)]
+    recon = np.concatenate([p["tokens"] for p in parts], axis=0)
+    np.testing.assert_array_equal(recon, b["tokens"])
+
+
+def test_elastic_reshard_same_stream():
+    """2 hosts vs 4 hosts see the same global data for the same step."""
+    ds = SyntheticLMDataset(CFG)
+    b = ds.batch(11)
+    two = np.concatenate([shard_batch(b, i, 2)["tokens"] for i in range(2)])
+    four = np.concatenate([shard_batch(b, i, 4)["tokens"] for i in range(4)])
+    np.testing.assert_array_equal(two, four)
+
+
+def test_token_file_dataset(tmp_path):
+    tokens = np.arange(10_000, dtype=np.int32) % 400
+    f = tmp_path / "tokens.bin"
+    tokens.tofile(f)
+    cfg = DataConfig(seq_len=32, global_batch=4, vocab=512, kind="token_file", path=str(f))
+    ds = build_dataset(cfg)
+    b = ds.batch(0)
+    assert b["tokens"].shape == (4, 32)
+    # labels shifted by one
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    # determinism
+    b2 = TokenFileDataset(cfg).batch(0)
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])

@@ -1,0 +1,62 @@
+"""Multi-pod dry-run integration: lower+compile one real cell per step
+kind on the production 256-device mesh (placeholder devices, subprocess).
+Marked slow; the full 40-cell matrix runs via `python -m repro.launch.dryrun
+--all` and is recorded in EXPERIMENTS.md."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = str(ROOT / "src")
+
+
+def run_dryrun(arch: str, shape: str, multi_pod=False, timeout=1200) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch, "--shape", shape]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-4000:]}\nstdout:\n{r.stdout[-2000:]}"
+    mesh = "pod2x16x16" if multi_pod else "pod16x16"
+    art = ROOT / "experiments" / "dryrun" / f"{arch}__{shape}__{mesh}.json"
+    return json.loads(art.read_text())
+
+
+@pytest.mark.slow
+def test_dryrun_train_cell():
+    rec = run_dryrun("olmo-1b", "train_4k")
+    assert rec["status"] == "ok"
+    assert rec["devices"] == 256
+    r = rec["roofline"]
+    assert r["compute_s"] > 0 and r["memory_s"] > 0
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert 0 < r["useful_flops_ratio"] <= 1.5
+    # memory must fit a 16 GiB v5e generously at smoke scale
+    assert rec["memory"]["total_per_device"] < 16 * 2**30
+
+
+@pytest.mark.slow
+def test_dryrun_decode_cell():
+    rec = run_dryrun("olmo-1b", "decode_32k")
+    assert rec["status"] == "ok"
+    assert rec["kind"] == "decode"
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_cell():
+    rec = run_dryrun("olmo-1b", "train_4k", multi_pod=True)
+    assert rec["status"] == "ok"
+    assert rec["devices"] == 512
+
+
+@pytest.mark.slow
+def test_dryrun_skip_rule():
+    rec = run_dryrun("starcoder2-15b", "long_500k")
+    assert rec["status"] == "skipped"
+    assert "sub-quadratic" in rec["reason"]

@@ -1,0 +1,184 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes, blocks, and epilogue options; hypothesis fuzzing on
+shapes and data."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels.int8_gemm import int8_gemm
+from repro.kernels.im2col import im2col
+
+
+def _rand_int8(rng, shape):
+    return jnp.asarray(rng.integers(-128, 128, shape, dtype=np.int8))
+
+
+# ---------------------------------------------------------------- GEMM ----
+
+
+@pytest.mark.parametrize(
+    "n,m,p",
+    [
+        (1, 1, 1),
+        (7, 13, 5),
+        (64, 64, 64),
+        (128, 128, 128),
+        (100, 200, 72),        # non-divisible by block
+        (129, 257, 130),       # just over block boundaries
+        (256, 64, 512),
+    ],
+)
+def test_gemm_matches_ref(rng, n, m, p):
+    w = _rand_int8(rng, (n, m))
+    x = _rand_int8(rng, (m, p))
+    y = int8_gemm(w, x)
+    yr = ref.int8_gemm_ref(w, x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    assert y.dtype == jnp.int8
+
+
+@pytest.mark.parametrize("shift", [-2, 0, 1, 4, 9, 15])
+@pytest.mark.parametrize("relu", [False, True])
+def test_gemm_epilogue_shift_relu(rng, shift, relu):
+    w = _rand_int8(rng, (48, 96))
+    x = _rand_int8(rng, (96, 32))
+    bias = jnp.asarray(rng.integers(-5000, 5000, (48,), dtype=np.int32))
+    y = int8_gemm(w, x, bias, shift=shift, relu=relu)
+    yr = ref.int8_gemm_ref(w, x, bias, shift=shift, relu=relu)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+def test_gemm_residual_fusion(rng):
+    w = _rand_int8(rng, (64, 64))
+    x = _rand_int8(rng, (64, 48))
+    res = _rand_int8(rng, (64, 48))
+    y = int8_gemm(w, x, shift=8, residual=res, relu=True)
+    yr = ref.int8_gemm_ref(w, x, shift=8, residual=res, relu=True)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    # ReLU output must be non-negative
+    assert int(np.asarray(y).min()) >= 0
+
+
+@pytest.mark.parametrize("bn,bp,bm", [(32, 32, 32), (128, 128, 128), (64, 128, 32)])
+def test_gemm_block_shapes(rng, bn, bp, bm):
+    """Result must be block-shape independent (pure tiling)."""
+    w = _rand_int8(rng, (96, 80))
+    x = _rand_int8(rng, (80, 56))
+    y = int8_gemm(w, x, shift=6, block_n=bn, block_p=bp, block_m=bm)
+    yr = ref.int8_gemm_ref(w, x, shift=6)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 150),
+    m=st.integers(1, 150),
+    p=st.integers(1, 150),
+    shift=st.integers(0, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_hypothesis(n, m, p, shift, seed):
+    rng = np.random.default_rng(seed)
+    w = _rand_int8(rng, (n, m))
+    x = _rand_int8(rng, (m, p))
+    bias = jnp.asarray(rng.integers(-100, 100, (n,), dtype=np.int32))
+    y = int8_gemm(w, x, bias, shift=shift, block_n=64, block_p=64, block_m=64)
+    yr = ref.int8_gemm_ref(w, x, bias, shift=shift)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+def test_gemm_accumulator_no_overflow_regime(rng):
+    """Worst-case int8 x int8 over M=512 stays within int32 (asserted by
+    exact agreement with the int32 oracle)."""
+    w = jnp.full((8, 512), -128, jnp.int8)
+    x = jnp.full((512, 8), -128, jnp.int8)
+    y = int8_gemm(w, x, shift=16)
+    yr = ref.int8_gemm_ref(w, x, shift=16)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+# -------------------------------------------------------------- IM2COL ----
+
+
+@pytest.mark.parametrize(
+    "h,w,c,k,stride,pad",
+    [
+        (8, 8, 3, 3, 1, 1),
+        (8, 8, 4, 3, 2, 1),
+        (16, 16, 8, 5, 2, 2),
+        (7, 9, 2, 3, 1, 0),
+        (224, 224, 3, 7, 2, 3),     # ResNet conv1
+        (4, 4, 1, 1, 1, 0),
+    ],
+)
+def test_im2col_matches_ref(rng, h, w, c, k, stride, pad):
+    img = _rand_int8(rng, (h, w, c))
+    got = ops.im2col(img, k, stride, pad)
+    want = ref.im2col_ref(img, k, stride, pad)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(3, 24),
+    w=st.integers(3, 24),
+    c=st.integers(1, 8),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    pad=st.integers(0, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_hypothesis(h, w, c, k, stride, pad, seed):
+    if h + 2 * pad < k or w + 2 * pad < k:
+        return
+    rng = np.random.default_rng(seed)
+    img = _rand_int8(rng, (h, w, c))
+    got = ops.im2col(img, k, stride, pad)
+    want = ref.im2col_ref(img, k, stride, pad)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_im2col_dtype_sweep(rng):
+    for dtype in (jnp.int8, jnp.float32, jnp.bfloat16):
+        img = jnp.asarray(rng.standard_normal((6, 6, 2)), dtype)
+        got = ops.im2col(img, 3, 1, 1)
+        want = ref.im2col_ref(img, 3, 1, 1)
+        np.testing.assert_array_equal(
+            np.asarray(got, np.float32), np.asarray(want, np.float32)
+        )
+
+
+# ------------------------------------------------------- conv-as-GEMM -----
+
+
+@pytest.mark.parametrize(
+    "h,cin,cout,k,stride,pad,relu",
+    [
+        (8, 3, 16, 3, 1, 1, True),
+        (8, 4, 8, 3, 2, 1, False),
+        (9, 2, 4, 1, 1, 0, True),
+        (10, 3, 6, 1, 2, 0, False),   # k=1 s=2: the PU's strided linear path
+        (12, 2, 4, 5, 2, 2, True),
+    ],
+)
+def test_conv_as_gemm_vs_xla_conv(rng, h, cin, cout, k, stride, pad, relu):
+    img = _rand_int8(rng, (h, h, cin))
+    w4d = _rand_int8(rng, (k, k, cin, cout))
+    bias = jnp.asarray(rng.integers(-300, 300, (cout,), dtype=np.int32))
+    got = ops.conv2d_int8(img, w4d, bias, k=k, stride=stride, pad=pad, shift=7, relu=relu)
+    want = ref.conv2d_int8_ref(img, w4d, bias, stride=stride, pad=pad, shift=7, relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv_residual_matches_ref(rng):
+    img = _rand_int8(rng, (8, 8, 4))
+    w4d = _rand_int8(rng, (3, 3, 4, 4))
+    res = _rand_int8(rng, (8, 8, 4))
+    got = ops.conv2d_int8(img, w4d, k=3, stride=1, pad=1, shift=8, relu=True, residual=res)
+    want = ref.conv2d_int8_ref(img, w4d, stride=1, pad=1, shift=8, relu=True, residual=res)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,88 @@
+"""INT8 KV cache with power-of-two scales (SSPerf optimization): numeric
+quality and structural correctness."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.models import api as model_api
+from repro.models.transformer import kv_dequantize, kv_quantize
+
+
+def test_kv_roundtrip_error_bound(key):
+    x = jax.random.normal(key, (2, 16, 4, 32)) * 3.0
+    q, e = kv_quantize(x)
+    assert q.dtype == jnp.int8 and e.dtype == jnp.int8
+    back = kv_dequantize(q, e, jnp.float32)
+    # error <= half a step of each row's power-of-two grid
+    step = jnp.exp2(e.astype(jnp.float32))[..., None]
+    assert bool(jnp.all(jnp.abs(back - x) <= step / 2 + 1e-6))
+
+
+def test_kv_quant_zero_rows_safe(key):
+    x = jnp.zeros((1, 4, 2, 8))
+    q, e = kv_quantize(x)
+    back = kv_dequantize(q, e, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(back), 0.0)
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "mixtral-8x7b"])
+def test_quantized_decode_tracks_bf16_path(arch):
+    cfg0 = smoke_variant(get_config(arch))
+    cfgq = dataclasses.replace(cfg0, kv_quant=True)
+    api = model_api.get_api(cfg0)
+    params = api.init_params(cfg0, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg0.vocab, (2, 10)), jnp.int32)
+
+    # same params, both cache flavors, token-by-token decode
+    def run(cfg):
+        cache = api.init_cache(cfg, 2, 24)
+        lg = None
+        for i in range(10):
+            lg, cache = api.decode_step(
+                cfg, params, cache, toks[:, i : i + 1], jnp.int32(i)
+            )
+        return np.asarray(lg, np.float32)
+
+    l0, lq = run(cfg0), run(cfgq)
+    assert np.max(np.abs(l0 - lq)) < 0.25, np.max(np.abs(l0 - lq))
+    # greedy decisions preserved
+    assert (np.argmax(l0, -1) == np.argmax(lq, -1)).all()
+
+
+def test_quant_cache_structure():
+    cfgq = dataclasses.replace(smoke_variant(get_config("olmo-1b")), kv_quant=True)
+    api = model_api.get_api(cfgq)
+    cache = api.init_cache(cfgq, 2, 16)
+    assert len(cache) == 4
+    assert cache[0].dtype == jnp.int8 and cache[2].dtype == jnp.int8
+    axes = api.cache_axes(cfgq)
+    assert len(axes) == 4
+    assert len(axes[2]) == cache[2].ndim
+
+
+def test_quant_cache_prefill_roundtrip():
+    cfgq = dataclasses.replace(smoke_variant(get_config("olmo-1b")), kv_quant=True)
+    api = model_api.get_api(cfgq)
+    params = api.init_params(cfgq, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfgq.vocab, (1, 8)), jnp.int32)
+    logits, cache = api.prefill(cfgq, params, {"tokens": toks})
+    assert len(cache) == 4
+    # decode continues from the quantized prefill cache
+    # (prefill cache length == prompt length; pad into a longer buffer)
+    full = api.init_cache(cfgq, 1, 32)
+    full = tuple(
+        jax.lax.dynamic_update_slice(f, c.astype(f.dtype), (0,) * f.ndim)
+        for f, c in zip(full, cache)
+    )
+    l2, _ = api.decode_step(
+        cfgq, params, full, jnp.argmax(logits, -1)[:, None].astype(jnp.int32),
+        jnp.int32(8),
+    )
+    assert bool(jnp.all(jnp.isfinite(l2.astype(jnp.float32))))

@@ -1,0 +1,108 @@
+"""Ring-buffer SWA KV cache: decode through a window-sized ring matches
+decode through the full-length cache (only the window is ever visible)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.models import api as model_api
+
+
+def _cfgs():
+    base = smoke_variant(get_config("mixtral-8x7b"))     # pure SWA (window 64)
+    base = dataclasses.replace(base, n_experts=0, top_k=0)  # dense: no
+    # capacity-coupling so full vs ring are exactly comparable
+    ring = dataclasses.replace(base, kv_ring=True)
+    return base, ring
+
+
+def _decode_seq(cfg, api, params, toks, max_len):
+    cache = api.init_cache(cfg, toks.shape[0], max_len)
+    step = jax.jit(
+        lambda p, c, t, i: api.decode_step(cfg, p, c, t, i)
+    )
+    lg = None
+    for i in range(toks.shape[1]):
+        lg, cache = step(params, cache, toks[:, i : i + 1], jnp.int32(i))
+    return np.asarray(lg, np.float32), cache
+
+
+def test_ring_cache_is_window_sized():
+    _, ring = _cfgs()
+    api = model_api.get_api(ring)
+    cache = api.init_cache(ring, 2, 256)
+    assert cache[0].shape[2] == ring.window          # 64, not 256
+
+
+def test_ring_decode_matches_full_before_wrap():
+    base, ring = _cfgs()
+    api = model_api.get_api(base)
+    params = api.init_params(base, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    s = ring.window // 2                              # no wrap yet
+    toks = jnp.asarray(rng.integers(0, base.vocab, (1, s)), jnp.int32)
+    l_full, _ = _decode_seq(base, api, params, toks, s + 8)
+    l_ring, _ = _decode_seq(ring, api, params, toks, s + 8)
+    np.testing.assert_allclose(l_ring, l_full, atol=1e-4, rtol=1e-3)
+
+
+def test_ring_decode_matches_full_after_wrap():
+    """Past the window the ring overwrites old slots; logits must still
+    match the full cache (those positions are masked out anyway)."""
+    base, ring = _cfgs()
+    api = model_api.get_api(base)
+    params = api.init_params(base, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    s = ring.window * 2 + 9                           # wraps twice
+    toks = jnp.asarray(rng.integers(0, base.vocab, (1, s)), jnp.int32)
+    l_full, _ = _decode_seq(base, api, params, toks, s + 8)
+    l_ring, _ = _decode_seq(ring, api, params, toks, s + 8)
+    np.testing.assert_allclose(l_ring, l_full, atol=2e-2, rtol=2e-2)
+    assert (np.argmax(l_ring, -1) == np.argmax(l_full, -1)).all()
+
+
+def test_ring_prefill_then_decode():
+    base, ring = _cfgs()
+    api = model_api.get_api(base)
+    params = api.init_params(base, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    s = ring.window + 17
+    toks = jnp.asarray(rng.integers(0, base.vocab, (1, s)), jnp.int32)
+    logits, cache = api.prefill(ring, params, {"tokens": toks})
+    assert cache[0].shape[2] == ring.window
+    nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    l2, _ = api.decode_step(ring, params, cache, nxt, jnp.int32(s))
+    # reference: full-cache prefill + decode
+    logits_f, cache_f = api.prefill(base, params, {"tokens": toks})
+    l2_f, _ = api.decode_step(base, params, cache_f, nxt, jnp.int32(s))
+    np.testing.assert_allclose(
+        np.asarray(l2, np.float32), np.asarray(l2_f, np.float32),
+        atol=5e-2, rtol=5e-2,   # bf16 accumulation-order noise
+    )
+    assert (np.argmax(np.asarray(l2), -1) == np.argmax(np.asarray(l2_f), -1)).all()
+
+
+def test_ring_with_kv_quant_composes():
+    base, ring = _cfgs()
+    both = dataclasses.replace(ring, kv_quant=True)
+    api = model_api.get_api(both)
+    params = api.init_params(base, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    s = ring.window + 12
+    toks = jnp.asarray(rng.integers(0, base.vocab, (1, s)), jnp.int32)
+    l_b, _ = _decode_seq(base, api, params, toks, s + 8)
+    l_q, cache = _decode_seq(both, api, params, toks, s + 8)
+    assert len(cache) == 4 and cache[0].shape[2] == ring.window
+    assert (np.argmax(l_q, -1) == np.argmax(l_b, -1)).all()
+
+
+def test_ring_refused_for_global_layers():
+    """gemma3 (local:global) must NOT shrink the cache."""
+    cfg = dataclasses.replace(smoke_variant(get_config("gemma3-12b")), kv_ring=True)
+    api = model_api.get_api(cfg)
+    cache = api.init_cache(cfg, 1, 256)
+    assert cache[0].shape[2] == 256

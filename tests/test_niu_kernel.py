@@ -1,0 +1,78 @@
+"""NIU Pallas kernel (paper SS VI as a hardware block): oracle agreement,
+determinism, and noise statistics."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.niu import niu_refresh, niu_refresh_ref
+
+
+def _q(rng, shape):
+    return jnp.asarray(rng.integers(-127, 128, shape, dtype=np.int8))
+
+
+@pytest.mark.parametrize(
+    "r,c,br,bc",
+    [
+        (256, 256, 256, 256),
+        (300, 200, 256, 256),     # padded
+        (64, 512, 32, 128),
+        (100, 100, 64, 64),
+    ],
+)
+def test_kernel_matches_oracle(rng, r, c, br, bc):
+    q = _q(rng, (r, c))
+    got = niu_refresh(q, jnp.int32(-4), 7, block_r=br, block_c=bc)
+    want = niu_refresh_ref(q, jnp.int32(-4), 7)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_deterministic_per_seed(rng):
+    q = _q(rng, (128, 128))
+    a = niu_refresh(q, jnp.int32(-3), 42)
+    b = niu_refresh(q, jnp.int32(-3), 42)
+    c = niu_refresh(q, jnp.int32(-3), 43)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (np.asarray(a) != np.asarray(c)).any()
+
+
+def test_noise_statistics(rng):
+    """Perturbation std in q-units ~ scale*(0.25|q| + 0.05 qmax)."""
+    q = jnp.full((512, 512), 64, jnp.int8)
+    out = niu_refresh(
+        q, jnp.int32(0), 1, prog_noise_scale=0.1, read_noise_scale=0.0
+    )
+    err = np.asarray(out, np.int32) - 64
+    # w_max is the tile's own max (64 here); rounding adds var 1/12
+    expected = np.sqrt((0.1 * (0.25 * 64 + 0.05 * 64)) ** 2 + 1 / 12)
+    assert err.std() == pytest.approx(expected, rel=0.1)
+    assert abs(err.mean()) < 0.1
+
+
+def test_zero_noise_is_identity(rng):
+    q = _q(rng, (96, 96))
+    out = niu_refresh(
+        q, jnp.int32(-2), 5,
+        prog_noise_scale=0.0, read_noise_scale=0.0, drift=1.0,
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(q))
+
+
+def test_drift_shrinks(rng):
+    q = jnp.full((64, 64), 100, jnp.int8)
+    out = niu_refresh(
+        q, jnp.int32(0), 3,
+        prog_noise_scale=0.0, read_noise_scale=0.0, drift=0.8,
+    )
+    np.testing.assert_array_equal(np.asarray(out), 80)
+
+
+def test_saturation(rng):
+    """Large read noise saturates to int8 range, never wraps."""
+    q = _q(rng, (64, 64))
+    out = np.asarray(
+        niu_refresh(q, jnp.int32(0), 9, prog_noise_scale=2.0, read_noise_scale=1.0)
+    )
+    assert out.min() >= -128 and out.max() <= 127

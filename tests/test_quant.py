@@ -1,0 +1,90 @@
+"""INT8 power-of-two quantization: the PU arithmetic (paper SS V)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def test_roundtrip_error_bound(key):
+    x = jax.random.normal(key, (128, 128)) * 3.0
+    t = quant.quantize(x)
+    err = jnp.max(jnp.abs(t.dequantize() - x))
+    # quantization error <= half a quantization step
+    step = jnp.exp2(t.exp.astype(jnp.float32))
+    assert float(err) <= float(step) / 2 + 1e-7
+
+
+def test_exponent_is_minimal():
+    x = jnp.asarray([100.0, -50.0])
+    e = quant.pow2_exponent(x)
+    # 100/2**e <= 127 and 100/2**(e-1) > 127
+    assert 100.0 / 2.0 ** float(e) <= 127.0
+    assert 100.0 / 2.0 ** (float(e) - 1) > 127.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_within_int8_range(scale, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    t = quant.quantize(x)
+    q = np.asarray(t.q)
+    assert q.min() >= quant.INT8_MIN and q.max() <= quant.INT8_MAX
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    v=st.integers(-(2**27), 2**27),
+    s=st.integers(0, 14),
+)
+def test_shift_round_matches_float_round(v, s):
+    """shift_round == round-half-away-from-zero of v / 2**s."""
+    got = int(quant.shift_round(jnp.asarray(v, jnp.int32), s))
+    want = int(np.sign(v) * np.floor(abs(v) / 2.0**s + 0.5))
+    assert got == want
+
+
+def test_shift_round_negative_shift_multiplies():
+    assert int(quant.shift_round(jnp.asarray(3, jnp.int32), -2)) == 12
+
+
+def test_requantize_path_consistent(key):
+    """W_q X_q int32 accumulator requantized == float product quantized."""
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (16, 32))
+    x = jax.random.normal(k2, (32, 8))
+    wq, xq = quant.quantize(w), quant.quantize(x)
+    acc = wq.q.astype(jnp.int32) @ xq.q.astype(jnp.int32)
+    acc_exp = quant.quantized_linear_exponents(wq.exp, xq.exp)
+    out_exp = quant.pow2_exponent(w @ x)
+    y = quant.requantize_i32(acc, acc_exp, out_exp)
+    y_float = jnp.clip(
+        jnp.round((w @ x) / jnp.exp2(out_exp.astype(jnp.float32))),
+        quant.INT8_MIN, quant.INT8_MAX,
+    )
+    # quantized-arithmetic result tracks the float result within 2 ulp on
+    # the output grid (1 ulp from each input quantization)
+    diff = np.abs(np.asarray(y, np.int32) - np.asarray(y_float, np.int32))
+    assert diff.max() <= 12  # loose analytic bound for 32-deep dot products
+
+
+def test_qtensor_is_pytree(key):
+    t = quant.quantize(jax.random.normal(key, (4, 4)))
+    leaves = jax.tree.leaves(t)
+    assert len(leaves) == 2
+    t2 = jax.tree.map(lambda x: x, t)
+    assert isinstance(t2, quant.QTensor)
+    np.testing.assert_array_equal(np.asarray(t.q), np.asarray(t2.q))
+
+
+def test_fake_quant_is_idempotent(key):
+    x = jax.random.normal(key, (32,))
+    y = quant.fake_quant(x)
+    z = quant.fake_quant(y)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(z), rtol=0, atol=1e-7)

@@ -1,0 +1,182 @@
+"""Roofline analysis: HLO collective parsing (trip-count aware), jaxpr FLOP
+counting, and the three-term computation."""
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import roofline as rl
+from repro.analysis.jaxpr_cost import count_flops, step_flops
+
+
+# --------------------------------------------------- collective parsing ---
+
+HLO_FLAT = """
+HloModule test
+
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %a = f32[128,256] parameter(0)
+  %ag = f32[256,256] all-gather(%a), dimensions={0}
+  %ar = f32[128,256] all-reduce(%a), to_apply=%add
+  ROOT %out = f32[128,256] add(%ar, %a)
+}
+"""
+
+
+def test_parse_flat_collectives():
+    stats = rl.parse_collectives(HLO_FLAT)
+    assert stats.op_bytes["all-gather"] == 256 * 256 * 4
+    assert stats.op_bytes["all-reduce"] == 128 * 256 * 4
+    assert stats.op_counts["all-gather"] == 1
+    # ring all-reduce wire estimate 2x
+    assert stats.wire_bytes == pytest.approx(
+        256 * 256 * 4 + 2 * 128 * 256 * 4
+    )
+
+
+HLO_WHILE = """
+HloModule scanny
+
+%body (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64] get-tuple-element(%p), index=1
+  %rs = f32[64] reduce-scatter(%x), dimensions={0}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[64]) tuple(%ni, %rs)
+}
+
+%cond (p: (s32[], f32[64])) -> pred[] {
+  %p = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[64]) -> f32[64] {
+  %x = f32[64] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[64]) tuple(%zero, %x)
+  %w = (s32[], f32[64]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[64] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplies_collectives():
+    stats = rl.parse_collectives(HLO_WHILE)
+    # reduce-scatter of 64 f32 = 256 B, x12 trips
+    assert stats.op_bytes["reduce-scatter"] == pytest.approx(12 * 256)
+    assert stats.op_counts["reduce-scatter"] == 12
+
+
+HLO_ASYNC = """
+HloModule asyncy
+
+ENTRY %main (x: f32[32]) -> f32[32] {
+  %x = f32[32] parameter(0)
+  %ags = (f32[32], f32[64]) all-gather-start(%x), dimensions={0}
+  %agd = f32[64] all-gather-done(%ags)
+  ROOT %o = f32[32] slice(%agd), slice={[0:32]}
+}
+"""
+
+
+def test_async_start_done_counted_once():
+    stats = rl.parse_collectives(HLO_ASYNC)
+    # start carries (input, output) tuple = (128 + 256)/2 = 192 halved;
+    # done must not double count
+    assert stats.op_counts["all-gather"] == 1
+    assert stats.op_bytes["all-gather"] == pytest.approx((32 * 4 + 64 * 4) / 2)
+
+
+def test_shape_bytes_dtypes():
+    assert rl._shape_bytes("bf16", "128,256") == 128 * 256 * 2
+    assert rl._shape_bytes("s8", "64") == 64
+    assert rl._shape_bytes("f32", "") == 4      # scalar
+
+
+# ------------------------------------------------------- FLOP counting ----
+
+
+def test_flops_matmul_exact():
+    f = lambda a, b: a @ b
+    specs = (
+        jax.ShapeDtypeStruct((64, 128), jnp.float32),
+        jax.ShapeDtypeStruct((128, 32), jnp.float32),
+    )
+    flops = step_flops(f, specs)
+    assert flops == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_flops_scan_multiplies():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    specs = (jax.ShapeDtypeStruct((32, 32), jnp.float32),)
+    flops = step_flops(f, specs)
+    assert flops >= 7 * 2 * 32**3
+    assert flops < 7 * 2 * 32**3 * 1.1
+
+
+def test_flops_grad_includes_backward():
+    def loss(w, x):
+        return jnp.sum((x @ w) ** 2)
+
+    g = jax.grad(loss)
+    specs = (
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((8, 64), jnp.float32),
+    )
+    fwd = step_flops(loss, specs)
+    bwd = step_flops(g, specs)
+    assert bwd > 1.8 * fwd      # backward ~2x forward for matmul chains
+
+
+# ------------------------------------------------------------- terms ------
+
+
+class _Mem:
+    argument_size_in_bytes = 8 * 2**30
+    output_size_in_bytes = 2 * 2**30
+    temp_size_in_bytes = 1 * 2**30
+    alias_size_in_bytes = 0
+
+
+def test_roofline_terms_and_dominance():
+    colls = rl.CollectiveStats(
+        op_bytes={"all-reduce": 1e12}, op_counts={"all-reduce": 2}
+    )
+    terms = rl.roofline(
+        jaxpr_flops_global=256 * 1e15,
+        mem_stats=_Mem(),
+        collectives=colls,
+        model_flops_global=256 * 0.5e15,
+        n_devices=256,
+    )
+    assert terms.compute_s == pytest.approx(1e15 / rl.PEAK_FLOPS)
+    assert terms.memory_s == pytest.approx(
+        (8 + 2 + 2 * 1) * 2**30 / rl.HBM_BW
+    )
+    assert terms.collective_s == pytest.approx(1e12 / rl.LINK_BW)
+    assert terms.dominant == "collective"
+    assert terms.useful_flops_ratio == pytest.approx(0.5)
+    assert 0 < terms.roofline_fraction <= 1.0
+
+
+def test_model_flops_kinds():
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES_BY_NAME
+
+    cfg = get_config("olmo-1b")
+    train = rl.model_flops_global(cfg, SHAPES_BY_NAME["train_4k"])
+    prefill = rl.model_flops_global(cfg, SHAPES_BY_NAME["prefill_32k"])
+    decode = rl.model_flops_global(cfg, SHAPES_BY_NAME["decode_32k"])
+    n = cfg.active_param_count()
+    assert train == pytest.approx(6 * n * 256 * 4096)
+    assert prefill == pytest.approx(2 * n * 32 * 32768)
+    assert decode == pytest.approx(2 * n * 128)

@@ -1,0 +1,219 @@
+"""Two-phase weight-transfer scheduler: paper semantics + invariants.
+
+Property tests (hypothesis) assert the invariants any valid schedule must
+satisfy; example tests pin the paper's §III semantics (zero-stall
+condition, stall formula, Fig. 4 relocation behaviour).
+"""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pu import PU_1X, PU_2X, TileCost, tpu_v5e_config
+from repro.core import scheduler as sched
+
+
+def tiles_from(lists):
+    return [TileCost(load_s=l, exec_s=e, mem_bytes=m) for l, e, m in lists]
+
+
+# ---------------------------------------------------------------- paper ---
+
+
+def test_zero_stall_when_load_fits_exec_window():
+    """l_i <= e_{i-1} and memory available => zero stall (SS III)."""
+    tiles = tiles_from([(1.0, 5.0, 10)] + [(4.0, 5.0, 10)] * 5)
+    s = sched.baseline_schedule(tiles, capacity=100)
+    assert s.feasible
+    assert s.total_stall == pytest.approx(0.0)
+
+
+def test_stall_equals_load_minus_exec():
+    """l_i > e_{i-1} => pipeline waits l_i - e_{i-1} (SS III)."""
+    tiles = tiles_from([(1.0, 2.0, 10), (6.0, 2.0, 10)])
+    s = sched.baseline_schedule(tiles, capacity=100)
+    # tile1 load starts when tile0 exec starts (window 0), runs 6s;
+    # tile0 exec ends at 2 => stall = 6 - 2 = 4
+    assert s.tiles[1].stall == pytest.approx(4.0)
+
+
+def test_stall_with_memory_limit_is_full_load():
+    """When memory is the limiter the wait approaches l_i (SS III)."""
+    # capacity fits exactly one tile: next load can only start after the
+    # current tile's execution releases its memory.
+    tiles = tiles_from([(1.0, 2.0, 100), (3.0, 2.0, 100)])
+    s = sched.baseline_schedule(tiles, capacity=100)
+    assert s.feasible
+    # tile1 load begins at tile0 exec END (release), so stall = full l_1
+    assert s.tiles[1].stall == pytest.approx(3.0)
+
+
+def test_preload_first_tile():
+    """Paper SS V: first tile pre-loaded 'to avoid an initial delay'."""
+    tiles = tiles_from([(5.0, 2.0, 10), (1.0, 2.0, 10)])
+    s = sched.baseline_schedule(tiles, capacity=100, preload_first=True)
+    # pre-load completes at t=0: no initial delay, no stall on tile 0
+    assert s.tiles[0].exec_start == pytest.approx(0.0)
+    assert s.tiles[0].stall == pytest.approx(0.0)
+    assert s.tiles[0].window == -1
+
+
+def test_adaptive_relocates_stall_to_earlier_window():
+    """Fig. 4: a stalled load moved into an earlier window disappears."""
+    # tile2's load (4s) doesn't fit tile1's exec (1s) but fits tile0's (6s).
+    tiles = tiles_from([(1.0, 6.0, 10), (1.0, 1.0, 10), (4.0, 1.0, 10)])
+    res = sched.two_phase(tiles, capacity=100)
+    assert res.baseline.total_stall > 0
+    assert res.adaptive.total_stall == pytest.approx(0.0)
+    assert res.stall_reduction == pytest.approx(1.0)
+    # the relocated tile's window moved earlier
+    assert res.adaptive.tiles[2].window < res.baseline.tiles[2].window
+
+
+def test_adaptive_respects_memory_when_relocating():
+    """A relocation that would overflow memory must be rejected."""
+    cap = 25
+    tiles = tiles_from(
+        [(1.0, 6.0, 10), (1.0, 1.0, 10), (4.0, 1.0, 10)]
+    )
+    # with capacity 25, loading tile2 (10) during tile0's window would
+    # have tiles 0+1+2 resident = 30 > 25 => relocation impossible.
+    res = sched.two_phase(tiles, capacity=cap)
+    assert res.adaptive.peak_memory() <= cap
+    # stall not fully removable
+    assert res.adaptive.total_stall > 0
+
+
+def test_infeasible_single_tile_too_large():
+    tiles = tiles_from([(1.0, 1.0, 200)])
+    s = sched.baseline_schedule(tiles, capacity=100)
+    assert not s.feasible
+
+
+def test_time_memory_ratios_shapes():
+    tiles = tiles_from([(1.0, 2.0, 30), (3.0, 2.0, 40), (1.0, 2.0, 50)])
+    res = sched.two_phase(tiles, capacity=100)
+    assert len(res.time_ratios()) == 2
+    assert len(res.memory_ratios()) == 2
+    # memory ratio definition: (m_i + m_{i+1}) / cap
+    assert res.memory_ratios()[0] == pytest.approx(0.7)
+    assert res.memory_ratios()[1] == pytest.approx(0.9)
+
+
+# ------------------------------------------------------------ invariants --
+
+
+@st.composite
+def tile_lists(draw):
+    n = draw(st.integers(1, 12))
+    tiles = []
+    for _ in range(n):
+        tiles.append(
+            TileCost(
+                load_s=draw(st.floats(0.01, 10, allow_nan=False)),
+                exec_s=draw(st.floats(0.01, 10, allow_nan=False)),
+                mem_bytes=draw(st.integers(1, 50)),
+            )
+        )
+    return tiles
+
+
+@settings(max_examples=60, deadline=None)
+@given(tiles=tile_lists(), cap=st.integers(50, 200))
+def test_schedule_invariants(tiles, cap):
+    res = sched.two_phase(tiles, capacity=cap)
+    for s in (res.baseline, res.adaptive):
+        if not s.feasible:
+            continue
+        # memory never exceeds capacity
+        assert s.peak_memory() <= cap
+        prev_end = 0.0
+        loads = sorted((t.load_start, t.load_end) for t in s.tiles)
+        # loads serialized on one channel
+        for (a0, a1), (b0, b1) in zip(loads, loads[1:]):
+            assert b0 >= a1 - 1e-9
+        for t in s.tiles:
+            # execution strictly in order, after its own load
+            assert t.exec_start >= t.load_end - 1e-9
+            assert t.exec_start >= prev_end - 1e-9
+            # stall formula
+            assert t.stall == pytest.approx(max(0.0, t.exec_start - prev_end))
+            prev_end = t.exec_end
+
+
+@settings(max_examples=60, deadline=None)
+@given(tiles=tile_lists(), cap=st.integers(50, 200))
+def test_adaptive_never_worse_than_baseline(tiles, cap):
+    res = sched.two_phase(tiles, capacity=cap)
+    if res.baseline.feasible:
+        assert res.adaptive.feasible
+        assert res.adaptive.total_stall <= res.baseline.total_stall + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(tiles=tile_lists())
+def test_infinite_memory_baseline_matches_closed_form(tiles):
+    """With unbounded memory the baseline stall has a closed form:
+    sum_i max(0, l_i - e_{i-1} - accumulated_slack)."""
+    cap = 10**9
+    s = sched.baseline_schedule(tiles, capacity=cap)
+    assert s.feasible
+    # simulate the closed form: load channel serialized, window = i-1
+    t_chan = -tiles[0].load_s
+    exec_end = 0.0
+    exec_start_prev = 0.0
+    total_stall = 0.0
+    for i, t in enumerate(tiles):
+        open_t = 0.0 if i == 0 else exec_start_prev
+        if i == 0:
+            open_t = -t.load_s
+        start = max(open_t, t_chan)
+        ld_end = start + t.load_s if i > 0 else 0.0
+        if i == 0:
+            ld_end = 0.0
+            t_chan = 0.0
+        else:
+            t_chan = ld_end
+        es = max(exec_end, ld_end)
+        total_stall += es - exec_end
+        exec_start_prev = es
+        exec_end = es + t.exec_s
+    assert s.total_stall == pytest.approx(total_stall, rel=1e-6, abs=1e-9)
+
+
+def test_utilization_definition():
+    tiles = tiles_from([(1.0, 4.0, 10), (8.0, 4.0, 10)])
+    s = sched.baseline_schedule(tiles, capacity=100)
+    busy = sum(t.exec_end - t.exec_start for t in s.tiles)
+    assert s.utilization == pytest.approx(busy / s.makespan)
+    assert 0 < s.utilization <= 1
+
+
+# ------------------------------------------------------------ PU costing --
+
+
+def test_pu_tile_costing_matches_paper_dims():
+    """PU_2x: R_SA=64, C_SA=8 -> a 64xM tile takes ceil(M/8) URAM entries."""
+    pu = PU_2X
+    m = 1000
+    assert pu.tile_bytes(m) == math.ceil(m / 8) * 8 * 64
+    # load time = bytes / (16B * 600MHz)
+    assert pu.load_time(m) == pytest.approx(pu.tile_bytes(m) / (16 * 600e6))
+    # exec: P waves x ceil(M/8) cycles at 600 MHz
+    assert pu.exec_time(m, p=49) == pytest.approx(49 * math.ceil(m / 8) / 600e6)
+
+
+def test_pu1x_half_compute_of_pu2x():
+    assert PU_1X.peak_ops_per_s == pytest.approx(PU_2X.peak_ops_per_s / 2)
+
+
+def test_tpu_profile_peak_matches():
+    pu = tpu_v5e_config()
+    assert pu.peak_ops_per_s == pytest.approx(197e12, rel=1e-6)
+
+
+def test_gemm_tiles_cover_weight_matrix():
+    pu = PU_2X
+    tiles = pu.gemm_tiles(n=200, m=300, p=10)
+    assert len(tiles) == math.ceil(200 / 64)
+    assert all(t.mem_bytes == pu.tile_bytes(300) for t in tiles)

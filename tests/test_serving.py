@@ -1,0 +1,119 @@
+"""Serving engine: continuous batching, determinism, streaming plan, AIMC
+round refresh, cache-lane isolation."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.core.aimc import AIMCNoiseModel
+from repro.core.pu import host_offload_config
+from repro.models import api as model_api
+from repro.runtime.serving import ServeConfig, ServingEngine, scatter_cache
+
+
+def _engine(arch="olmo-1b", **kw):
+    cfg = smoke_variant(get_config(arch))
+    api = model_api.get_api(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    defaults = dict(max_batch=2, max_len=64, max_new_tokens=6, seed=0)
+    defaults.update(kw)
+    return cfg, ServingEngine(cfg, params, ServeConfig(**defaults))
+
+
+def _prompts(cfg, n, length=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, length).astype(np.int32) for _ in range(n)]
+
+
+def test_completes_all_requests():
+    cfg, eng = _engine()
+    for p in _prompts(cfg, 5):
+        eng.submit(p)
+    done = eng.run_until_drained()
+    assert len(done) == 5
+    assert all(len(r.out_tokens) == 6 for r in done)
+    stats = eng.stats()
+    assert stats["completed"] == 5.0 and stats["tokens"] == 30.0
+
+
+def test_greedy_is_deterministic():
+    cfg, e1 = _engine()
+    _, e2 = _engine()
+    ps = _prompts(cfg, 3)
+    for p in ps:
+        e1.submit(p.copy())
+        e2.submit(p.copy())
+    d1 = e1.run_until_drained()
+    d2 = e2.run_until_drained()
+    for a, b in zip(d1, d2):
+        assert a.out_tokens == b.out_tokens
+
+
+def test_batching_preserves_per_request_results():
+    """A request served alone == the same request served amid others
+    (cache lanes are isolated)."""
+    cfg, alone = _engine(max_batch=1)
+    prompt = _prompts(cfg, 1, seed=5)[0]
+    alone.submit(prompt.copy())
+    ref_tokens = alone.run_until_drained()[0].out_tokens
+
+    _, crowded = _engine(max_batch=2)
+    other = _prompts(cfg, 1, seed=9)[0]
+    crowded.submit(prompt.copy())
+    crowded.submit(other)
+    done = {r.uid: r for r in crowded.run_until_drained()}
+    assert done[0].out_tokens == ref_tokens
+
+
+def test_more_requests_than_slots_queue():
+    cfg, eng = _engine(max_batch=2)
+    for p in _prompts(cfg, 7):
+        eng.submit(p)
+    done = eng.run_until_drained()
+    assert len(done) == 7
+
+
+def test_aimc_changes_generations():
+    cfg, clean = _engine()
+    _, noisy = _engine(aimc=AIMCNoiseModel(prog_noise_scale=0.5))
+    ps = _prompts(cfg, 2)
+    for p in ps:
+        clean.submit(p.copy())
+        noisy.submit(p.copy())
+    d_clean = clean.run_until_drained()
+    d_noisy = noisy.run_until_drained()
+    assert any(
+        a.out_tokens != b.out_tokens for a, b in zip(d_clean, d_noisy)
+    )
+    assert noisy.niu is not None
+
+
+def test_streaming_plan_attached():
+    cfg, eng = _engine(stream_pu=host_offload_config())
+    assert eng.streaming_plan is not None
+    assert eng.streaming_plan.schedule.feasible
+    for p in _prompts(cfg, 2):
+        eng.submit(p)
+    eng.run_until_drained()
+    assert "stream_tiles" in eng.stats()
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "zamba2-1.2b"])
+def test_ssm_families_serve(arch):
+    cfg, eng = _engine(arch)
+    for p in _prompts(cfg, 3):
+        eng.submit(p)
+    done = eng.run_until_drained()
+    assert len(done) == 3
+
+
+def test_scatter_cache_writes_one_lane(key):
+    full = (jnp.zeros((2, 4, 8, 2, 3)), jnp.zeros((2, 4, 8, 2, 3)))
+    one = (jnp.ones((2, 1, 5, 2, 3)), 2 * jnp.ones((2, 1, 5, 2, 3)))
+    out = scatter_cache(full, one, slot=2, length=5)
+    a = np.asarray(out[0])
+    assert a[:, 2, :5].min() == 1.0          # written lane
+    assert a[:, [0, 1, 3]].max() == 0.0      # untouched lanes
+    assert a[:, 2, 5:].max() == 0.0          # beyond length zero

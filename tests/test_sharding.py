@@ -1,0 +1,76 @@
+"""Logical-axis sharding rules: resolution, divisibility dropping, and the
+named rule-sets used by the dry-run."""
+import pytest
+
+import jax
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.parallel.sharding import (
+    NAMED_RULES,
+    RULES_DP_ONLY,
+    RULES_FSDP_TP,
+    resolve_spec,
+)
+
+MESH_1POD = AbstractMesh((16, 16), ("data", "model"))
+MESH_2POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_batch_shards_over_pod_and_data():
+    spec = resolve_spec(("batch", None), MESH_2POD, RULES_FSDP_TP)
+    assert spec == P(("pod", "data"))
+    spec1 = resolve_spec(("batch", None), MESH_1POD, RULES_FSDP_TP)
+    assert spec1 == P("data")            # pod axis absent -> dropped
+
+
+def test_ff_shards_over_model():
+    spec = resolve_spec((None, "ff"), MESH_1POD, RULES_FSDP_TP)
+    assert spec == P(None, "model")
+
+
+def test_divisibility_drops_axis():
+    # dim 24 not divisible by 16 -> axis dropped
+    spec = resolve_spec(("ff",), MESH_1POD, RULES_FSDP_TP, dims=(24,))
+    assert spec == P()
+    spec2 = resolve_spec(("ff",), MESH_1POD, RULES_FSDP_TP, dims=(32,))
+    assert spec2 == P("model")
+
+
+def test_no_axis_reuse_across_dims():
+    """The same mesh axis can appear at most once in a PartitionSpec."""
+    spec = resolve_spec(("ff", "vocab"), MESH_1POD, RULES_FSDP_TP)
+    # both map to 'model'; second must be dropped
+    flat = []
+    for part in spec:
+        if part is None:
+            continue
+        flat.extend(part if isinstance(part, tuple) else [part])
+    assert len(flat) == len(set(flat))
+
+
+def test_unknown_logical_axis_is_replicated():
+    spec = resolve_spec(("nonexistent-axis",), MESH_1POD, RULES_FSDP_TP)
+    assert spec == P()
+
+
+def test_dp_only_rules_put_batch_on_everything():
+    spec = resolve_spec(("batch",), MESH_2POD, RULES_DP_ONLY)
+    assert spec == P(("pod", "data", "model"))
+
+
+def test_partial_divisibility_keeps_prefix():
+    """batch -> (pod, data): dim 32 divisible by pod(2)*data(16)=32 keeps
+    both; dim 16 keeps only a prefix that divides."""
+    spec = resolve_spec(("batch",), MESH_2POD, RULES_FSDP_TP, dims=(32,))
+    assert spec == P(("pod", "data"))
+    spec2 = resolve_spec(("batch",), MESH_2POD, RULES_FSDP_TP, dims=(2,))
+    assert spec2 == P(("pod",))
+
+
+def test_named_rules_registry():
+    assert set(NAMED_RULES) >= {"fsdp_tp", "dp_only", "tp_heavy"}
+
+
+def test_trailing_nones_trimmed():
+    spec = resolve_spec(("batch", None, None), MESH_1POD, RULES_FSDP_TP)
+    assert spec == P("data")

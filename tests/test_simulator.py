@@ -1,0 +1,108 @@
+"""Cycle-approximate PU simulator: reproduces the paper's evaluation
+(SS IV-V): Table I throughput, Fig. 5(a) latencies, the 98% efficiency
+claim, and the WRB out-of-order benefit."""
+import math
+
+import pytest
+
+from repro.core.pu import PU_1X, PU_2X
+from repro.core import simulator as sim
+from repro.core import wrb
+
+
+# ------------------------------------------------------------- Table I ----
+
+PAPER = {
+    18: {"fps": 1237.7, "fps_per_tops": 268.6},
+    50: {"fps": 584.9, "fps_per_tops": 126.9},
+}
+TOL = 0.06  # simulator within 6% of measured hardware
+
+
+@pytest.mark.parametrize("variant", [18, 50])
+def test_table1_fleet_throughput(variant):
+    layers = sim.resnet_gemm_layers(variant)
+    s1 = sim.simulate_model(PU_1X, layers)
+    s2 = sim.simulate_model(PU_2X, layers)
+    fleet = sim.FleetSim(sims=[("pu1x", s1, 5), ("pu2x", s2, 5)])
+    assert fleet.tops == pytest.approx(4.608, rel=1e-3)       # paper's note 1
+    assert fleet.fps == pytest.approx(PAPER[variant]["fps"], rel=TOL)
+    assert fleet.fps_per_tops == pytest.approx(
+        PAPER[variant]["fps_per_tops"], rel=TOL
+    )
+
+
+def test_resnet50_latency_matches_paper():
+    """Paper SS V: ResNet-50 latency 25.3 ms (PU_1x) / 12.9 ms (PU_2x)."""
+    layers = sim.resnet_gemm_layers(50)
+    lat1 = sim.simulate_model(PU_1X, layers).frame_s_scheduled * 1e3
+    lat2 = sim.simulate_model(PU_2X, layers).frame_s_scheduled * 1e3
+    assert lat1 == pytest.approx(25.3, rel=0.08)
+    assert lat2 == pytest.approx(12.9, rel=0.08)
+
+
+@pytest.mark.parametrize("variant", [18, 50])
+def test_efficiency_near_98_percent(variant):
+    """Paper SS V: 'up to 98% performance efficiency'."""
+    layers = sim.resnet_gemm_layers(variant)
+    for pu in (PU_1X, PU_2X):
+        eff = sim.simulate_model(pu, layers).efficiency
+        assert 0.95 <= eff <= 1.0
+
+
+def test_pu2x_twice_pu1x_throughput():
+    layers = sim.resnet_gemm_layers(50)
+    f1 = sim.simulate_model(PU_1X, layers).fps_scheduled
+    f2 = sim.simulate_model(PU_2X, layers).fps_scheduled
+    assert f2 / f1 == pytest.approx(2.0, rel=0.05)
+
+
+# ------------------------------------------------- layer table structure --
+
+
+def test_resnet_gemm_macs_scale():
+    """ResNet-50 ~4.1 GMACs, ResNet-18 ~1.8 GMACs (ImageNet literature),
+    with the paper's conv1-as-GEMM padding (147->160)."""
+    m18 = sum(l.macs for l in sim.resnet_gemm_layers(18))
+    m50 = sum(l.macs for l in sim.resnet_gemm_layers(50))
+    assert 1.6e9 < m18 < 2.1e9
+    assert 3.6e9 < m50 < 4.4e9
+
+
+def test_first_layer_padded_to_160():
+    l0 = sim.resnet_gemm_layers(18)[0]
+    assert l0.m == 160      # 147 padded to 160 bytes (SS V)
+
+
+def test_wrb_rate_condition_flagged():
+    """R_g >= R_SA/ceil(M/C_SA) (SS V) is checked per layer."""
+    ls = sim.simulate_layer(PU_2X, sim.GemmLayer("t", n=64, m=64, p=10), r_g=8)
+    # ceil(64/8)=8 cycles per wave; 64/8=8 <= r_g=8 -> ok
+    assert ls.wrb_rate_ok
+    ls2 = sim.simulate_layer(PU_2X, sim.GemmLayer("t", n=64, m=8, p=10), r_g=8)
+    # 1 cycle per wave; rate 64 > 8 -> backpressure possible
+    assert not ls2.wrb_rate_ok
+
+
+# ----------------------------------------------------------------- WRB ----
+
+
+def test_wrb_out_of_order_never_slower():
+    cfg = wrb.WRBConfig()
+    for interval in (2, 4, 8, 16):
+        in_order, ooo = wrb.ooo_benefit(cfg, n_waves=64, wave_interval=interval)
+        assert ooo.cycles <= in_order.cycles
+        assert ooo.efficiency >= in_order.efficiency - 1e-9
+
+
+def test_wrb_ooo_benefit_exists_for_fast_producer():
+    """When waves arrive faster than the drain rate, OOO admission removes
+    head-of-line blocking (the paper's 'minimizing the idle state')."""
+    cfg = wrb.WRBConfig(capacity_waves=4)
+    in_order, ooo = wrb.ooo_benefit(cfg, n_waves=128, wave_interval=2)
+    assert ooo.producer_stall_cycles < in_order.producer_stall_cycles
+
+
+def test_wrb_zero_waves():
+    s = wrb.simulate_wrb(wrb.WRBConfig(), 0, 4)
+    assert s.cycles == 0 and s.efficiency == 1.0
