@@ -350,6 +350,121 @@ def bench_streaming_lm():
     )
 
 
+# --------------------------------------------------- plan subsystem -------
+
+
+def bench_plan_suite(fast: bool):
+    """repro.plan perf trajectory: adaptive-phase wall time, stall
+    reduction, and incremental-vs-reference speedup for ResNet-18/50 and
+    one LM config; multi-PU partitioning and plan-cache behaviour.
+    Emits BENCH_plan.json at the repo root so future PRs can diff."""
+    import time as _time
+
+    from repro.configs import get_config
+    from repro.core.pu import PU_1X, PU_2X, host_offload_config
+    from repro.core import scheduler as sched
+    from repro.core import simulator as sim
+    from repro.plan import PlanCache, plan
+    from repro.runtime.serving import model_gemms
+
+    records = {}
+
+    def run():
+        records.clear()
+        # ResNet workloads under memory pressure (adaptive phase active)
+        for variant in (18, 50):
+            layers = sim.resnet_gemm_layers(variant)
+            tiles = sim.model_tiles(PU_2X, layers)
+            cap = int(PU_2X.fast_mem_bytes * 0.25)
+            t0 = _time.perf_counter()
+            new = plan(tiles, cap)
+            t_new = _time.perf_counter() - t0
+            rec = {
+                "tiles": len(tiles),
+                "capacity_frac": 0.25,
+                "adaptive_wall_s": t_new,
+                "baseline_stall_s": new.baseline_stall,
+                "adaptive_stall_s": new.total_stall,
+                "stall_reduction": new.stall_reduction,
+                "relocations": len(new.relocations()),
+            }
+            if not fast and variant == 18:
+                # reference comparison on the smaller net (r50 ~20s)
+                t0 = _time.perf_counter()
+                ref = sched.reference_two_phase(tiles, cap)
+                rec["reference_wall_s"] = _time.perf_counter() - t0
+                rec["speedup"] = rec["reference_wall_s"] / t_new
+                rec["bit_identical"] = (
+                    [t.window for t in ref.adaptive.tiles] == list(new.windows)
+                    and ref.adaptive.total_stall == new.total_stall
+                )
+            records[f"resnet{variant}"] = rec
+
+        # one LM config: host->HBM streaming plan of a decode round
+        cfg = get_config("olmo-1b")
+        gemms = model_gemms(cfg, batch_tokens=16)
+        pu = host_offload_config()
+        tiles = []
+        for _, n, m, p in gemms:
+            tiles.extend(pu.gemm_tiles(n, m, p))
+        t0 = _time.perf_counter()
+        lm_plan = plan(tiles, pu.fast_mem_bytes)
+        records["olmo_1b_decode"] = {
+            "tiles": len(tiles),
+            "adaptive_wall_s": _time.perf_counter() - t0,
+            "baseline_stall_s": lm_plan.baseline_stall,
+            "adaptive_stall_s": lm_plan.total_stall,
+            "stall_reduction": lm_plan.stall_reduction,
+        }
+
+        # multi-PU partitioning: K=2 pipeline vs the best single PU
+        layers = sim.resnet_gemm_layers(50)
+        part = sim.simulate_partitioned([PU_1X, PU_2X], layers)
+        single = max(
+            sim.simulate_model(PU_1X, layers).fps_scheduled,
+            sim.simulate_model(PU_2X, layers).fps_scheduled,
+        )
+        records["partition_resnet50_k2"] = {
+            "fps": part.fps,
+            "best_single_pu_fps": single,
+            "pipeline_gain": part.fps / single,
+            "stages": part.summary()["stages"],
+        }
+
+        # cache effectiveness: replanning an identical workload is free
+        # (fresh cache so the cold path is exercised exactly once)
+        tiles = sim.model_tiles(PU_2X, sim.resnet_gemm_layers(18))
+        cache = PlanCache()
+        t0 = _time.perf_counter()
+        cache.get_or_plan(tiles, PU_2X.fast_mem_bytes)
+        t_cold = _time.perf_counter() - t0
+        t0 = _time.perf_counter()
+        cache.get_or_plan(tiles, PU_2X.fast_mem_bytes)
+        records["plan_cache"] = {
+            "cold_plan_s": t_cold,
+            "warm_plan_s": _time.perf_counter() - t0,
+            "hits_gained": cache.stats()["hits"],
+        }
+        return records
+
+    # no timed() here: its warmup pass would double the suite's wall time
+    # and pre-warm the cache record
+    t0 = _time.perf_counter()
+    run()
+    us = (_time.perf_counter() - t0) * 1e6
+    r18 = records["resnet18"]
+    part = records["partition_resnet50_k2"]
+    derived = (
+        f"r18_adaptive_s={r18['adaptive_wall_s']:.3f};"
+        f"r18_stall_red={r18['stall_reduction']:.3f};"
+        + (f"r18_speedup={r18['speedup']:.1f}x;" if "speedup" in r18 else "")
+        + f"k2_gain={part['pipeline_gain']:.2f}x;"
+        f"cache_hits={records['plan_cache']['hits_gained']}"
+    )
+    emit("plan", us, derived, records)
+    (ROOT / "BENCH_plan.json").write_text(json.dumps(records, indent=1))
+
+
 # -------------------------------------------------------- end-to-end ------
 
 
@@ -458,6 +573,7 @@ BENCHES = {
     "kernel_im2col": bench_kernel_im2col,
     "scheduler_capacity_sweep": lambda fast: bench_scheduler_sweep(),
     "streaming_plan_lm": lambda fast: bench_streaming_lm(),
+    "plan": bench_plan_suite,
     "train_smoke": lambda fast: bench_train_smoke(),
     "serve_smoke": lambda fast: bench_serve_smoke(),
     "roofline_summary": lambda fast: bench_roofline_summary(),

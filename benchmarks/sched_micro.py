@@ -1,0 +1,103 @@
+"""Scheduler microbenchmark: incremental planner vs full-replay reference.
+
+Times the adaptive phase (paper SS III phase 2) on a ResNet-50-scale tile
+list under memory pressure -- the planner's hot path -- comparing the
+unified ``repro.plan`` incremental planner against the original
+full-re-simulation implementation kept as
+``core.scheduler.reference_adaptive_schedule``.  Asserts bit-identical
+output (same windows, stalls, makespan) and, in full mode, the >=5x
+speedup target on a >=200-tile workload.
+
+    PYTHONPATH=src python benchmarks/sched_micro.py [--smoke]
+
+``--smoke`` runs a reduced workload without the speedup assertion (CI).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def run_micro(capacity_frac: float = 0.25, variant: int = 50, smoke: bool = False):
+    from repro.core.pu import PU_2X
+    from repro.core import scheduler as sched
+    from repro.core import simulator as sim
+    from repro.plan import plan
+
+    layers = sim.resnet_gemm_layers(variant)
+    tiles = sim.model_tiles(PU_2X, layers)
+    capacity = int(PU_2X.fast_mem_bytes * capacity_frac)
+    max_scan = 8 if smoke else None
+
+    base = sched.baseline_schedule(tiles, capacity)
+    assert base.feasible
+
+    t0 = time.perf_counter()
+    ref = sched.reference_adaptive_schedule(
+        tiles, capacity, baseline=base, max_window_scan=max_scan
+    )
+    t_ref = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    new = plan(tiles, capacity, max_window_scan=max_scan)
+    t_new = time.perf_counter() - t0
+
+    # bit-identical adaptive schedules
+    assert list(new.windows) == [t.window for t in ref.tiles], "window mismatch"
+    assert new.total_stall == ref.total_stall, "stall mismatch"
+    assert new.makespan == ref.makespan, "makespan mismatch"
+
+    speedup = t_ref / t_new if t_new > 0 else float("inf")
+    return {
+        "workload": f"resnet{variant}_pu2x@{capacity_frac:.2f}cap",
+        "tiles": len(tiles),
+        "capacity_bytes": capacity,
+        "max_window_scan": max_scan,
+        "reference_adaptive_s": t_ref,
+        "incremental_plan_s": t_new,
+        "speedup": speedup,
+        "baseline_stall_s": base.total_stall,
+        "adaptive_stall_s": new.total_stall,
+        "stall_reduction": new.stall_reduction,
+        "relocations": len(new.relocations()),
+        "bit_identical": True,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced workload, no speedup assertion (CI)")
+    ap.add_argument("--capacity-frac", type=float, default=0.25)
+    args = ap.parse_args()
+
+    rec = run_micro(
+        capacity_frac=args.capacity_frac,
+        variant=18 if args.smoke else 50,
+        smoke=args.smoke,
+    )
+    print(json.dumps(rec, indent=1))
+
+    out = ROOT / "experiments" / "bench"
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "sched_micro.json").write_text(json.dumps(rec, indent=1))
+
+    if not args.smoke:
+        assert rec["tiles"] >= 200, f"workload too small: {rec['tiles']} tiles"
+        assert rec["speedup"] >= 5.0, (
+            f"incremental planner only {rec['speedup']:.1f}x faster "
+            "(target >=5x)"
+        )
+        print(f"OK: {rec['speedup']:.1f}x on {rec['tiles']} tiles")
+    else:
+        assert rec["speedup"] > 0.5, "incremental planner unexpectedly slow"
+        print(f"smoke OK: {rec['speedup']:.1f}x on {rec['tiles']} tiles")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,6 @@
+"""Version/dependency compatibility shims.
+
+The repo targets current JAX but must degrade gracefully on the pinned
+container toolchain (jax 0.4.x, no hypothesis wheel).  Policy: real
+packages always win; shims only fill in when an import would fail.
+"""

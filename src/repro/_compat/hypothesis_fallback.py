@@ -1,0 +1,171 @@
+"""Minimal stand-in for the `hypothesis` property-testing API.
+
+The container image has no hypothesis wheel and installing packages is
+off-limits, but the test suite leans on property tests for the scheduler
+and kernels.  This module implements the small slice of the API those
+tests use -- ``given``/``settings`` decorators and the ``strategies``
+combinators ``integers``, ``floats``, ``booleans``, ``sampled_from``,
+``lists``, and ``composite`` -- as a deterministic random-example runner
+(seeded per test, so failures reproduce).
+
+It is *not* hypothesis: no shrinking, no example database, no edge-case
+bias beyond always trying strategy bounds first.  ``tests/conftest.py``
+installs it into ``sys.modules`` only when the real package is missing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable, List, Sequence
+
+
+class Strategy:
+    """A value generator: ``draw(rnd)`` produces one example."""
+
+    def __init__(self, draw_fn: Callable[[random.Random], Any], boundary=()):
+        self._draw = draw_fn
+        # values worth trying before random sampling (poor man's edge bias)
+        self.boundary = tuple(boundary)
+
+    def draw(self, rnd: random.Random) -> Any:
+        return self._draw(rnd)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rnd: fn(self.draw(rnd)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "Strategy":
+        def draw(rnd: random.Random):
+            for _ in range(1000):
+                v = self.draw(rnd)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate too restrictive")
+        return Strategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(
+        lambda rnd: rnd.randint(min_value, max_value),
+        boundary=(min_value, max_value),
+    )
+
+
+def floats(
+    min_value: float,
+    max_value: float,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+) -> Strategy:
+    del allow_nan, allow_infinity  # bounded draws are always finite
+    return Strategy(
+        lambda rnd: rnd.uniform(min_value, max_value),
+        boundary=(min_value, max_value),
+    )
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rnd: rnd.random() < 0.5, boundary=(False, True))
+
+
+def sampled_from(options: Sequence[Any]) -> Strategy:
+    options = list(options)
+    return Strategy(lambda rnd: rnd.choice(options), boundary=options[:2])
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rnd: random.Random):
+        n = rnd.randint(min_size, max_size)
+        return [elements.draw(rnd) for _ in range(n)]
+    return Strategy(draw)
+
+
+def composite(fn: Callable[..., Any]) -> Callable[..., Strategy]:
+    """``@st.composite`` -- fn's first arg is the ``draw`` function."""
+
+    @functools.wraps(fn)
+    def make(*args, **kwargs) -> Strategy:
+        def draw_example(rnd: random.Random):
+            return fn(lambda strat: strat.draw(rnd), *args, **kwargs)
+        return Strategy(draw_example)
+
+    return make
+
+
+class _Settings:
+    def __init__(self, max_examples: int = 20, deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._hypothesis_settings = self
+        return fn
+
+
+settings = _Settings
+
+
+def given(**strategy_kwargs: Strategy):
+    """Run the test over ``max_examples`` deterministic random examples."""
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            cfg = getattr(fn, "_hypothesis_settings", None) or _Settings()
+            seed0 = zlib.crc32(fn.__qualname__.encode())
+            names = list(strategy_kwargs)
+            for ex in range(cfg.max_examples):
+                rnd = random.Random(seed0 + ex)
+                drawn = {}
+                for pos, name in enumerate(names):
+                    strat = strategy_kwargs[name]
+                    # first examples walk the strategy boundaries
+                    if ex < len(strat.boundary):
+                        drawn[name] = strat.boundary[ex]
+                    else:
+                        drawn[name] = strat.draw(rnd)
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (#{ex}): {drawn!r}"
+                    ) from e
+        runner.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # Hide the drawn parameters from pytest's fixture resolution: the
+        # visible signature keeps only non-strategy params (real fixtures).
+        sig = inspect.signature(fn)
+        runner.__signature__ = sig.replace(
+            parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs
+            ]
+        )
+        return runner
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` if the real one is absent."""
+    if "hypothesis" in sys.modules:
+        return
+    try:
+        import hypothesis  # noqa: F401  (real package present)
+        return
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.Strategy = Strategy
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "composite"):
+        setattr(strategies, name, globals()[name])
+    strategies.Strategy = Strategy
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

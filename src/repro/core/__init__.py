@@ -15,6 +15,8 @@ from repro.core.scheduler import (
     TwoPhaseResult,
     adaptive_schedule,
     baseline_schedule,
+    reference_adaptive_schedule,
+    reference_two_phase,
     simulate,
     two_phase,
 )
@@ -30,6 +32,7 @@ __all__ = [
     "PUConfig", "TileCost", "PU_1X", "PU_2X", "tpu_v5e_config",
     "host_offload_config", "QTensor", "quantize", "dequantize", "fake_quant",
     "Schedule", "TwoPhaseResult", "adaptive_schedule", "baseline_schedule",
+    "reference_adaptive_schedule", "reference_two_phase",
     "simulate", "two_phase", "StreamingExecutor", "StreamingPlan",
     "WeightTile", "gemm_sequence_tiles", "plan_streaming",
 ]

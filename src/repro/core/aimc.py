@@ -71,8 +71,9 @@ def inject_noise_float(
 def _is_weight_leaf(path: tuple) -> bool:
     # AIMC emulation targets GEMM weight matrices; biases/norms stay digital
     # (the paper's NIU rewrites URAM *weight* regions, biases are static).
-    leaf_name = str(path[-1]) if path else ""
-    return "w" in leaf_name.lower() or "kernel" in leaf_name.lower()
+    # Embedding tables count: tied embeddings serve as the unembed GEMM.
+    leaf_name = str(path[-1]).lower() if path else ""
+    return any(s in leaf_name for s in ("w", "kernel", "embed"))
 
 
 class NoiseInjectionUnit:

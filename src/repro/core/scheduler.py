@@ -23,6 +23,12 @@ The scheduler is memory-hierarchy agnostic: it only sees ``TileCost``
 (load seconds / exec seconds / bytes) plus a capacity, so the same code
 plans URAM@FPGA (the paper), VMEM@TPU, and host-offload@TPU schedules
 (see ``core/pu.py``).
+
+``two_phase`` / ``adaptive_schedule`` are thin wrappers over the unified
+planning subsystem (``repro.plan``, see DESIGN.md SS1): the incremental
+planner there is bit-identical but an order of magnitude faster on the
+adaptive phase.  ``simulate`` and the ``reference_*`` entry points keep
+the original full-replay implementation as the semantics oracle.
 """
 from __future__ import annotations
 
@@ -267,6 +273,45 @@ def adaptive_schedule(
     that can only partially hide a load (beyond-paper variant; slower,
     occasionally better -- compared in the benchmark harness).
     ``max_window_scan`` bounds candidate windows examined per stalled tile.
+
+    Thin wrapper over the unified planning subsystem (``repro.plan``),
+    which evaluates candidates by incremental suffix re-simulation; the
+    result is bit-identical to :func:`reference_adaptive_schedule` (the
+    original full-replay implementation, kept for verification and the
+    scheduler microbenchmark).  A caller-supplied ``baseline`` with a
+    non-default window assignment falls back to the reference path.
+    """
+    if baseline is not None:
+        if not baseline.feasible:
+            return baseline
+        default = [-1] + list(range(len(tiles) - 1))
+        if [t.window for t in baseline.tiles] != default:
+            return reference_adaptive_schedule(
+                tiles, capacity, preload_first, baseline=baseline,
+                exhaustive=exhaustive, max_window_scan=max_window_scan,
+            )
+    from repro import plan as _plan
+
+    result = _plan.plan(
+        tiles, capacity, preload_first=preload_first,
+        exhaustive=exhaustive, max_window_scan=max_window_scan,
+    )
+    return result.to_schedule("adaptive")
+
+
+def reference_adaptive_schedule(
+    tiles: Sequence[TileCost],
+    capacity: int,
+    preload_first: bool = True,
+    baseline: Optional[Schedule] = None,
+    exhaustive: bool = False,
+    max_window_scan: Optional[int] = None,
+) -> Schedule:
+    """Original O(n^2)-per-candidate adaptive phase (full re-simulation).
+
+    Semantics reference for ``repro.plan``: kept verbatim so the property
+    tests and the scheduler microbenchmark can assert the incremental
+    planner reproduces it bit-for-bit (same windows, stalls, makespan).
     """
     if baseline is None:
         baseline = baseline_schedule(tiles, capacity, preload_first)
@@ -345,9 +390,30 @@ def two_phase(
     exhaustive: bool = False,
     max_window_scan: Optional[int] = None,
 ) -> TwoPhaseResult:
-    """Run both phases and return both schedules (paper Fig. 4)."""
+    """Run both phases and return both schedules (paper Fig. 4).
+
+    Thin wrapper over ``repro.plan`` (single planning path for the repo);
+    see :func:`reference_two_phase` for the original implementation.
+    """
+    from repro import plan as _plan
+
+    result = _plan.plan(
+        tiles, capacity, preload_first=preload_first,
+        exhaustive=exhaustive, max_window_scan=max_window_scan,
+    )
+    return result.to_two_phase()
+
+
+def reference_two_phase(
+    tiles: Sequence[TileCost],
+    capacity: int,
+    preload_first: bool = True,
+    exhaustive: bool = False,
+    max_window_scan: Optional[int] = None,
+) -> TwoPhaseResult:
+    """Both phases via the original full-replay planner (verification)."""
     base = baseline_schedule(tiles, capacity, preload_first)
-    adpt = adaptive_schedule(
+    adpt = reference_adaptive_schedule(
         tiles, capacity, preload_first, baseline=base,
         exhaustive=exhaustive, max_window_scan=max_window_scan,
     )

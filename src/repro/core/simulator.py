@@ -19,10 +19,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Literal, Sequence, Tuple
+from typing import TYPE_CHECKING, List, Literal, Optional, Sequence, Tuple
 
 from repro.core.pu import PUConfig, TileCost
 from repro.core import scheduler as sched
+
+if TYPE_CHECKING:  # repro.plan imports core.pu: keep the cycle lazy
+    from repro.plan import ExecutionPlan, PartitionedPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +64,7 @@ class ModelSim:
     schedule: sched.TwoPhaseResult
     frame_s_resident: float       # all weights on-chip (Fig. 5a conditions)
     frame_s_scheduled: float      # with two-phase weight streaming stalls
+    plan: Optional["ExecutionPlan"] = None   # underlying repro.plan IR
 
     @property
     def fps_resident(self) -> float:
@@ -120,17 +124,23 @@ def simulate_model(
     r_g: int = 8,
     schedule_mode: Literal["two_phase", "baseline", "resident"] = "two_phase",
 ) -> ModelSim:
+    from repro.plan import plan_cached
+
     per_layer = [simulate_layer(pu, l, r_g) for l in layers]
     frame_resident = sum(l.latency_s for l in per_layer)
 
     tiles = model_tiles(pu, layers)
-    result = sched.two_phase(tiles, capacity=pu.fast_mem_bytes)
+    # single planning path: the content-hashed cache means sweeping the
+    # same model across schedule modes (or re-running a benchmark) plans
+    # once per (tiles, capacity) pair
+    exec_plan = plan_cached(tiles, pu.fast_mem_bytes)
+    result = exec_plan.to_two_phase()
     if schedule_mode == "resident":
         stall = 0.0
     elif schedule_mode == "baseline":
-        stall = result.baseline.total_stall
+        stall = exec_plan.baseline_stall
     else:
-        stall = result.adaptive.total_stall
+        stall = exec_plan.total_stall
     frame_scheduled = frame_resident + stall
     return ModelSim(
         layers=per_layer,
@@ -138,6 +148,7 @@ def simulate_model(
         schedule=result,
         frame_s_resident=frame_resident,
         frame_s_scheduled=frame_scheduled,
+        plan=exec_plan,
     )
 
 
@@ -223,22 +234,59 @@ def resnet_gemm_layers(variant: Literal[18, 50]) -> List[GemmLayer]:
     return layers
 
 
+def simulate_partitioned(
+    pus: Sequence[PUConfig],
+    layers: Sequence[GemmLayer],
+    r_g: int = 8,
+) -> "PartitionedPlan":
+    """Split one model across K PUs as a pipeline (repro.plan.partition).
+
+    Contiguous layer ranges are balanced on the simulator's per-layer
+    latency under each stage's own cost model, then each stage runs its
+    own two-phase weight-transfer schedule against its own URAM capacity
+    and load channel.  Steady-state FPS is set by the bottleneck stage --
+    genuine single-stream scaling, in contrast to ``FleetSim``'s
+    frame-per-PU additivity.
+    """
+    from repro.plan import partition as _partition
+
+    return _partition.partition_layers(
+        list(layers),
+        list(pus),
+        latency_s=lambda pu, l: simulate_layer(pu, l, r_g).latency_s,
+        tiles_of=lambda pu, l: pu.gemm_tiles(l.n, l.m, l.p),
+    )
+
+
 @dataclasses.dataclass
 class FleetSim:
-    """Multi-PU throughput: each PU processes one frame independently
+    """Multi-PU throughput: replicated frames and/or partitioned pipelines.
 
-    over its own HBM channels (paper SS V) -- so fleet FPS is additive.
+    ``sims`` is the paper's SS V evaluation mode: each PU processes one
+    frame independently over its own HBM channels, so FPS is additive.
+    ``pipelines`` is the replacement API for single-stream scaling: one
+    model partitioned across several PU profiles (see
+    :func:`simulate_partitioned`); each pipeline contributes its
+    bottleneck-stage frame rate.
     """
 
-    sims: List[Tuple[str, ModelSim, int]]  # (pu name, sim, count)
+    sims: List[Tuple[str, ModelSim, int]] = dataclasses.field(
+        default_factory=list
+    )  # (pu name, sim, count)
+    pipelines: List[Tuple[str, "PartitionedPlan", int]] = dataclasses.field(
+        default_factory=list
+    )  # (name, partitioned plan, count)
 
     @property
     def fps(self) -> float:
-        return sum(c * s.fps_scheduled for _, s, c in self.sims)
+        return sum(c * s.fps_scheduled for _, s, c in self.sims) + sum(
+            c * p.fps for _, p, c in self.pipelines
+        )
 
     @property
     def tops(self) -> float:
-        return sum(c * s.pu.peak_ops_per_s for _, s, c in self.sims) / 1e12
+        t = sum(c * s.pu.peak_ops_per_s for _, s, c in self.sims) / 1e12
+        return t + sum(c * p.tops for _, p, c in self.pipelines)
 
     @property
     def fps_per_tops(self) -> float:

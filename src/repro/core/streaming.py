@@ -14,12 +14,17 @@ and the compute functionally, so every schedule property is testable.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (
+    TYPE_CHECKING, Any, Callable, Dict, List, Optional, Sequence, Tuple,
+)
 
 import numpy as np
 
 from repro.core.pu import PUConfig, TileCost
 from repro.core import scheduler as sched
+
+if TYPE_CHECKING:  # repro.plan imports core.pu: keep the cycle lazy
+    from repro.plan import ExecutionPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,41 +48,56 @@ class WeightTile:
 @dataclasses.dataclass
 class StreamingPlan:
     tiles: List[WeightTile]
-    result: sched.TwoPhaseResult
+    plan: "ExecutionPlan"
     pu: PUConfig
 
     @property
+    def result(self) -> sched.TwoPhaseResult:
+        """Legacy two-schedule view of the underlying ExecutionPlan."""
+        return self.plan.to_two_phase()
+
+    @property
     def schedule(self) -> sched.Schedule:
-        return self.result.adaptive
+        return self.plan.to_schedule("adaptive")
+
+    def issue_order(self) -> List[int]:
+        """Tile indices in channel (load-issue) order.
+
+        The load channel is serial and drains its queue sorted by
+        ``(window, tile)``; this is the order the executor must fetch in.
+        """
+        windows = self.plan.windows
+        return sorted(range(len(self.tiles)), key=lambda i: (windows[i], i))
 
     def prefetch_order(self) -> List[Tuple[str, int]]:
         """(tile name, window) in load-issue order."""
-        order = sorted(
-            self.schedule.tiles, key=lambda t: (t.load_start, t.index)
-        )
-        return [(self.tiles[t.index].name, t.window) for t in order]
+        windows = self.plan.windows
+        return [(self.tiles[i].name, windows[i]) for i in self.issue_order()]
 
     def summary(self) -> Dict[str, float]:
-        base, adpt = self.result.baseline, self.result.adaptive
-        return {
+        out = {
             "tiles": len(self.tiles),
             "capacity_bytes": float(self.pu.fast_mem_bytes),
-            "weight_bytes": float(sum(t.mem_bytes for t in adpt.tiles)),
-            "baseline_stall_s": base.total_stall,
-            "adaptive_stall_s": adpt.total_stall,
-            "stall_reduction": self.result.stall_reduction,
-            "baseline_util": base.utilization,
-            "adaptive_util": adpt.utilization,
-            "makespan_s": adpt.makespan,
+            "weight_bytes": float(self.plan.weight_bytes),
+            "baseline_stall_s": self.plan.baseline_stall,
+            "adaptive_stall_s": self.plan.total_stall,
+            "stall_reduction": self.plan.stall_reduction,
+            "baseline_util": self.plan.baseline.utilization,
+            "adaptive_util": self.plan.utilization,
+            "makespan_s": self.plan.makespan,
         }
+        return out
 
 
 def plan_streaming(
     tiles: Sequence[WeightTile], pu: PUConfig
 ) -> StreamingPlan:
+    """Plan a tile sequence on ``pu`` via the shared (cached) planner."""
+    from repro.plan import plan_cached
+
     costs = [t.cost(pu) for t in tiles]
-    result = sched.two_phase(costs, capacity=pu.fast_mem_bytes)
-    return StreamingPlan(tiles=list(tiles), result=result, pu=pu)
+    result = plan_cached(costs, pu.fast_mem_bytes)
+    return StreamingPlan(tiles=list(tiles), plan=result, pu=pu)
 
 
 def gemm_sequence_tiles(
@@ -132,17 +152,23 @@ class StreamingExecutor:
         schedule = self.plan.schedule
         assert schedule.feasible, "infeasible streaming plan"
         tiles = self.plan.tiles
-        issue_order = sorted(
-            range(len(tiles)), key=lambda i: (schedule.tiles[i].load_start, i)
-        )
+        # The load channel is serial: fetches MUST follow the plan's issue
+        # order (queue sorted by (window, tile)).  Issuing by raw
+        # load_start with an exemption for tile i's own load could pull a
+        # late load ahead of queued earlier ones, breaking the residency
+        # account the schedule was verified against.
+        issue_order = self.plan.issue_order()
         costs = [schedule.tiles[i].mem_bytes for i in range(len(tiles))]
         outputs: List[Optional[Any]] = [None] * len(tiles)
         qpos = 0
         for i in range(len(tiles)):
-            # Issue every prefetch the plan places before tile i executes.
+            # Issue, in plan order, every prefetch the plan starts no later
+            # than tile i's execution.  Tile i's own load is always among
+            # them: its load_start precedes its exec_start, and everything
+            # queued before it starts no later still.
             while qpos < len(issue_order):
                 j = issue_order[qpos]
-                if schedule.tiles[j].load_start > schedule.tiles[i].exec_start and j != i:
+                if schedule.tiles[j].load_start > schedule.tiles[i].exec_start:
                     break
                 if j not in self._resident:
                     self._resident[j] = self.fetch(tiles[j].name)

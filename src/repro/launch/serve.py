@@ -1,12 +1,14 @@
 """Serving launcher: batched requests against any assigned architecture.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --smoke \
-        --requests 16 --max-new 24 [--stream] [--aimc]
+        --requests 16 --max-new 24 [--stream] [--multi-pu K] [--aimc]
 
 ``--stream`` plans host->HBM weight streaming with the paper's two-phase
 scheduler and prints the plan summary (stall reduction, utilization);
-``--aimc`` enables the SS VI noise-injection emulation, refreshing weights
-with fresh PCM-style noise every round.
+``--multi-pu K`` instead partitions the model's GEMM sequence across K
+PU profiles (repro.plan.partition) so one served model streams across
+several PUs; ``--aimc`` enables the SS VI noise-injection emulation,
+refreshing weights with fresh PCM-style noise every round.
 """
 from __future__ import annotations
 
@@ -19,7 +21,7 @@ import jax
 
 from repro.configs import ARCH_IDS, get_config, smoke_variant
 from repro.core.aimc import AIMCNoiseModel
-from repro.core.pu import host_offload_config
+from repro.core.pu import host_offload_config, tpu_v5e_config
 from repro.models import api as model_api
 from repro.runtime.serving import ServeConfig, ServingEngine
 
@@ -35,6 +37,9 @@ def main() -> int:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--stream", action="store_true",
                     help="plan weight streaming (two-phase scheduler)")
+    ap.add_argument("--multi-pu", type=int, default=0, metavar="K",
+                    help="partition the model across K PU profiles "
+                         "(alternating host-offload / v5e)")
     ap.add_argument("--aimc", action="store_true",
                     help="AIMC noise emulation (SS VI NIU)")
     ap.add_argument("--seed", type=int, default=0)
@@ -54,6 +59,14 @@ def main() -> int:
         temperature=args.temperature,
         seed=args.seed,
         stream_pu=host_offload_config() if args.stream else None,
+        stream_pus=(
+            [
+                host_offload_config() if k % 2 == 0 else tpu_v5e_config()
+                for k in range(args.multi_pu)
+            ]
+            if args.multi_pu
+            else None
+        ),
         aimc=AIMCNoiseModel() if args.aimc else None,
     )
     engine = ServingEngine(cfg, params, serve_cfg)

@@ -1,0 +1,43 @@
+"""repro.plan: the unified planning subsystem.
+
+Single planning path for the whole repo -- the two-phase weight-transfer
+heuristic (paper SS III) planned once into an :class:`ExecutionPlan` IR
+that scheduling (``core.scheduler``), streaming (``core.streaming``),
+simulation (``core.simulator``), and serving (``runtime.serving``) all
+consume.  See DESIGN.md.
+
+- ``ir``:        ExecutionPlan / Timeline (tiles + windows + resolved
+                 timeline + vectorized residency account)
+- ``engine``:    incremental event engine (suffix re-simulation,
+                 prefix-sum memory queries)
+- ``planner``:   two-phase planner, bit-identical to the reference
+- ``partition``: multi-PU pipeline partitioning (contiguous layer
+                 ranges balanced on exec time, per-PU scheduling)
+- ``cache``:     content-hashed plan cache
+"""
+from repro.plan.cache import PLAN_CACHE, PlanCache, plan_cached, plan_key
+from repro.plan.ir import ExecutionPlan, Timeline, infeasible_plan
+from repro.plan.partition import (
+    PartitionedPlan,
+    StagePlan,
+    balance_layer_ranges,
+    partition_gemms,
+    partition_layers,
+)
+from repro.plan.planner import plan
+
+__all__ = [
+    "ExecutionPlan",
+    "Timeline",
+    "infeasible_plan",
+    "plan",
+    "plan_cached",
+    "plan_key",
+    "PlanCache",
+    "PLAN_CACHE",
+    "PartitionedPlan",
+    "StagePlan",
+    "balance_layer_ranges",
+    "partition_gemms",
+    "partition_layers",
+]

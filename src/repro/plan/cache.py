@@ -1,0 +1,98 @@
+"""Content-hashed plan cache.
+
+``ServingEngine`` and the benchmark harness repeatedly plan identical
+(tiles, capacity) pairs -- every engine restart, every benchmark repeat,
+every fleet member sharing a PU profile.  Plans are pure functions of
+their inputs, so they are cached under a content hash of the packed tile
+costs plus the planner options.  ``ExecutionPlan`` is frozen and its
+arrays are never mutated by consumers, so sharing one instance is safe.
+"""
+from __future__ import annotations
+
+import hashlib
+import struct
+import threading
+from collections import OrderedDict
+from typing import Optional, Sequence
+
+from repro.core.pu import TileCost
+from repro.plan.ir import ExecutionPlan
+from repro.plan.planner import plan as _plan
+
+
+def plan_key(
+    tiles: Sequence[TileCost],
+    capacity: int,
+    *,
+    preload_first: bool = True,
+    adaptive: bool = True,
+    exhaustive: bool = False,
+    max_window_scan: Optional[int] = None,
+) -> str:
+    """Content hash of everything the planner's output depends on."""
+    h = hashlib.sha256()
+    h.update(
+        struct.pack(
+            "<q???q",
+            capacity,
+            preload_first,
+            adaptive,
+            exhaustive,
+            -1 if max_window_scan is None else max_window_scan,
+        )
+    )
+    for t in tiles:
+        h.update(struct.pack("<ddq", t.load_s, t.exec_s, t.mem_bytes))
+    return h.hexdigest()
+
+
+class PlanCache:
+    """Thread-safe LRU keyed by :func:`plan_key`."""
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[str, ExecutionPlan]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_plan(
+        self, tiles: Sequence[TileCost], capacity: int, **opts
+    ) -> ExecutionPlan:
+        key = plan_key(tiles, capacity, **opts)
+        with self._lock:
+            cached = self._entries.get(key)
+            if cached is not None:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return cached
+            self.misses += 1
+        result = _plan(tiles, capacity, **opts)
+        with self._lock:
+            self._entries[key] = result
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+        return result
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "hits": self.hits,
+                "misses": self.misses,
+            }
+
+
+PLAN_CACHE = PlanCache()
+
+
+def plan_cached(tiles: Sequence[TileCost], capacity: int, **opts) -> ExecutionPlan:
+    """Module-level cache shared by serving, simulation, and benchmarks."""
+    return PLAN_CACHE.get_or_plan(tiles, capacity, **opts)

@@ -1,0 +1,211 @@
+"""Multi-PU plan partitioning: split one model across K PU profiles.
+
+The paper scales throughput by instantiating several PUs; its evaluation
+(SS V) runs one *frame per PU*, which makes fleet FPS purely additive
+(the old ``FleetSim`` model).  Real scaling of a single stream -- the
+N3H-Core observation -- comes from *partitioning* one network across
+heterogeneous compute cores.  This module implements that as a pipeline:
+
+1. **Contiguous layer-range partitioning balanced on exec time**: an
+   exact DP over (layer boundary, stage) minimizes the bottleneck stage
+   compute time, with per-stage costs evaluated under that stage's own
+   PU cost model (profiles may be heterogeneous).
+2. **Per-PU two-phase scheduling**: each stage plans its own tile
+   sequence against its own fast-memory capacity and load channel with
+   the standard two-phase planner, so weight streaming stalls are
+   charged per stage.
+
+Steady-state pipeline throughput is ``1 / max_k stage_time_k`` (frames
+enter the pipeline at the bottleneck stage rate); single-frame latency
+is the sum of stage times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.pu import PUConfig
+from repro.plan.ir import ExecutionPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """One pipeline stage: a contiguous layer range on one PU."""
+
+    pu: PUConfig
+    layer_start: int
+    layer_stop: int                  # exclusive
+    plan: ExecutionPlan              # two-phase plan of the stage's tiles
+    compute_s: float                 # all-weights-resident stage latency
+
+    @property
+    def stage_s(self) -> float:
+        """Stage time per frame: compute plus weight-streaming stalls."""
+        return self.compute_s + self.plan.total_stall
+
+    @property
+    def n_layers(self) -> int:
+        return self.layer_stop - self.layer_start
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionedPlan:
+    """A model split across K PUs as a synchronous pipeline."""
+
+    stages: Tuple[StagePlan, ...]
+
+    @property
+    def feasible(self) -> bool:
+        return all(s.plan.feasible for s in self.stages)
+
+    @property
+    def bottleneck_s(self) -> float:
+        return max(s.stage_s for s in self.stages)
+
+    @property
+    def fps(self) -> float:
+        return 1.0 / self.bottleneck_s
+
+    @property
+    def latency_s(self) -> float:
+        return sum(s.stage_s for s in self.stages)
+
+    @property
+    def tops(self) -> float:
+        return sum(s.pu.peak_ops_per_s for s in self.stages) / 1e12
+
+    @property
+    def fps_per_tops(self) -> float:
+        return self.fps / self.tops
+
+    def summary(self) -> dict:
+        return {
+            "stages": [
+                {
+                    "pu": s.pu.name,
+                    "layers": [s.layer_start, s.layer_stop],
+                    "compute_s": s.compute_s,
+                    "stall_s": s.plan.total_stall,
+                    "stage_s": s.stage_s,
+                    "tiles": s.plan.n,
+                }
+                for s in self.stages
+            ],
+            "fps": self.fps,
+            "latency_s": self.latency_s,
+            "bottleneck_s": self.bottleneck_s,
+            "fps_per_tops": self.fps_per_tops,
+            "feasible": self.feasible,
+        }
+
+
+def balance_layer_ranges(
+    stage_costs: np.ndarray,
+) -> List[Tuple[int, int]]:
+    """Min-bottleneck contiguous partition of L layers into K stages.
+
+    ``stage_costs[k, i]`` is layer *i*'s cost on stage *k*'s PU.  Exact
+    DP: ``f[k][i]`` = best bottleneck for layers[:i] on stages[:k+1],
+    requiring every stage non-empty.  O(K * L^2).
+    """
+    K, L = stage_costs.shape
+    if K > L:
+        raise ValueError(f"cannot split {L} layers into {K} non-empty stages")
+    prefix = np.zeros((K, L + 1))
+    prefix[:, 1:] = np.cumsum(stage_costs, axis=1)
+
+    INF = math.inf
+    f = np.full((K, L + 1), INF)
+    cut = np.zeros((K, L + 1), np.int64)
+    f[0, 1:] = prefix[0, 1:]
+    for k in range(1, K):
+        for i in range(k + 1, L + 1):
+            best, best_j = INF, k
+            # stage k covers layers [j, i); previous stages cover [:j)
+            for j in range(k, i):
+                b = max(f[k - 1, j], prefix[k, i] - prefix[k, j])
+                if b < best:
+                    best, best_j = b, j
+            f[k, i] = best
+            cut[k, i] = best_j
+    # recover boundaries
+    bounds = [L]
+    i = L
+    for k in range(K - 1, 0, -1):
+        i = int(cut[k, i])
+        bounds.append(i)
+    bounds.append(0)
+    bounds.reverse()
+    return [(bounds[s], bounds[s + 1]) for s in range(K)]
+
+
+def partition_layers(
+    layers: Sequence,
+    pus: Sequence[PUConfig],
+    *,
+    latency_s,
+    tiles_of,
+    use_cache: bool = True,
+) -> PartitionedPlan:
+    """Partition an arbitrary layer sequence across ``pus``.
+
+    ``latency_s(pu, layer) -> float`` costs one layer on one PU (drives
+    the balancing DP and the stage compute account); ``tiles_of(pu,
+    layer) -> [TileCost]`` produces the stage's schedulable tiles.
+    """
+    from repro.plan.cache import plan_cached
+    from repro.plan.planner import plan as _plan
+
+    K = len(pus)
+    if K == 0:
+        raise ValueError("need at least one PU profile")
+    costs = np.array([[latency_s(pu, l) for l in layers] for pu in pus])
+    ranges = balance_layer_ranges(costs)
+
+    stages = []
+    for s, (pu, (start, stop)) in enumerate(zip(pus, ranges)):
+        tiles = []
+        for layer in layers[start:stop]:
+            tiles.extend(tiles_of(pu, layer))
+        if use_cache:
+            stage_plan = plan_cached(tiles, pu.fast_mem_bytes)
+        else:
+            stage_plan = _plan(tiles, pu.fast_mem_bytes)
+        stages.append(
+            StagePlan(
+                pu=pu,
+                layer_start=start,
+                layer_stop=stop,
+                plan=stage_plan,
+                compute_s=float(costs[s, start:stop].sum()),
+            )
+        )
+    return PartitionedPlan(stages=tuple(stages))
+
+
+def partition_gemms(
+    gemms: Sequence[Tuple[str, int, int, int]],
+    pus: Sequence[PUConfig],
+    *,
+    layer_latency_s=None,
+    use_cache: bool = True,
+) -> PartitionedPlan:
+    """Partition a (name, N, M, P) GEMM sequence across ``pus``.
+
+    ``layer_latency_s(pu, (name, n, m, p)) -> float`` overrides the
+    per-layer cost model; the default charges the PU's systolic-array
+    execution time (the simulator layers richer I/O modelling on top via
+    ``core.simulator.simulate_partitioned``).
+    """
+    if layer_latency_s is None:
+        layer_latency_s = lambda pu, g: pu.exec_time(g[2], g[3], g[1])
+    return partition_layers(
+        list(gemms),
+        pus,
+        latency_s=layer_latency_s,
+        tiles_of=lambda pu, g: pu.gemm_tiles(g[1], g[2], g[3]),
+        use_cache=use_cache,
+    )

@@ -1,0 +1,91 @@
+"""Two-phase planner over the incremental engine -> ExecutionPlan.
+
+Phase 1 (baseline): tile *i*'s load is issued during tile *i-1*'s
+execution window.  Phase 2 (adaptive): stalled tiles, visited in
+descending stall order, have their loads tentatively relocated into
+earlier windows (nearest-first, windows able to conceal the load unless
+``exhaustive``); any relocation reducing overall stall is retained.
+
+Control flow replicates ``core.scheduler.adaptive_schedule`` exactly --
+same visit order, same acceptance test, same early exit -- so the
+resulting windows and timelines are bit-identical to the reference; the
+difference is that each candidate is evaluated by suffix re-simulation
+(plan/engine.py) instead of a full O(n^2) replay.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+from repro.core.pu import TileCost
+from repro.plan import engine as _engine
+from repro.plan.ir import ExecutionPlan, infeasible_plan
+
+_EPS = 1e-12
+
+
+def plan(
+    tiles: Sequence[TileCost],
+    capacity: int,
+    *,
+    preload_first: bool = True,
+    adaptive: bool = True,
+    exhaustive: bool = False,
+    max_window_scan: Optional[int] = None,
+) -> ExecutionPlan:
+    """Plan a costed tile sequence against one fast-memory capacity."""
+    t_begin = time.perf_counter()
+    n = len(tiles)
+    load_s = [t.load_s for t in tiles]
+    exec_s = [t.exec_s for t in tiles]
+    mem = [t.mem_bytes for t in tiles]
+    eng = _engine.PlanEngine(load_s, exec_s, mem, capacity, preload_first)
+
+    baseline_windows = list(range(-1, n - 1))
+    base = eng.simulate(baseline_windows)
+    if not base.feasible:
+        return infeasible_plan(tiles, capacity, preload_first)
+
+    windows = list(baseline_windows)
+    best = base
+    best_stall = base.total_stall
+
+    if adaptive and n:
+        base_stalls = base.timeline().stalls()
+        stalled = sorted(
+            (i for i in range(n) if base_stalls[i] > _EPS),
+            key=lambda i: -base_stalls[i],
+        )
+        for j in stalled:
+            if windows[j] <= 0:
+                continue
+            l_j = load_s[j]
+            scanned = 0
+            for k in range(windows[j] - 1, -1, -1):
+                if not exhaustive and exec_s[k] < l_j - _EPS:
+                    continue  # paper: window k cannot conceal l_j
+                if max_window_scan is not None and scanned >= max_window_scan:
+                    break
+                scanned += 1
+                ok, trial_stall, stall_j = eng.try_relocation(
+                    best, j, k, best_stall - _EPS
+                )
+                if ok and trial_stall < best_stall - _EPS:
+                    windows[j] = k
+                    # promote: full re-sim rebuilds the snapshots the next
+                    # suffix replay resumes from
+                    best = eng.simulate(windows)
+                    best_stall = best.total_stall
+                    if stall_j <= _EPS:
+                        break
+
+    return ExecutionPlan(
+        tiles=tuple(tiles),
+        capacity=capacity,
+        preload_first=preload_first,
+        baseline_windows=tuple(base.windows),
+        windows=tuple(best.windows),
+        baseline=base.timeline(),
+        timeline=best.timeline(),
+        plan_wall_s=time.perf_counter() - t_begin,
+    )

@@ -30,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -42,6 +42,7 @@ from repro.core.aimc import AIMCNoiseModel, NoiseInjectionUnit
 from repro.core.pu import PUConfig, host_offload_config
 from repro.core.streaming import StreamingPlan, WeightTile, plan_streaming
 from repro.models import api as model_api
+from repro.plan import PartitionedPlan, partition_gemms
 
 
 @dataclasses.dataclass
@@ -54,6 +55,11 @@ class ServeConfig:
     seed: int = 0
     # weight streaming (host->HBM level); None disables planning
     stream_pu: Optional[PUConfig] = None
+    # multi-PU partitioned streaming: the model's layer sequence is split
+    # across these profiles (contiguous ranges balanced on exec time, one
+    # two-phase schedule per PU -- repro.plan.partition); overrides the
+    # single-PU plan when set
+    stream_pus: Optional[List[PUConfig]] = None
     # AIMC emulation
     aimc: Optional[AIMCNoiseModel] = None
     aimc_refresh_every: int = 1    # refresh noise every N engine rounds
@@ -119,7 +125,12 @@ class ServingEngine:
 
         # --- paper machinery ------------------------------------------------
         self.streaming_plan: Optional[StreamingPlan] = None
-        if serve_cfg.stream_pu is not None:
+        self.partitioned_plan: Optional[PartitionedPlan] = None
+        if serve_cfg.stream_pus:
+            self.partitioned_plan = plan_partitioned_streaming(
+                cfg, serve_cfg.stream_pus, batch_tokens=serve_cfg.max_batch
+            )
+        elif serve_cfg.stream_pu is not None:
             self.streaming_plan = plan_model_streaming(
                 cfg, serve_cfg.stream_pu, batch_tokens=serve_cfg.max_batch
             )
@@ -267,6 +278,19 @@ class ServingEngine:
             out.update(
                 {f"stream_{k}": v for k, v in self.streaming_plan.summary().items()}
             )
+        if self.partitioned_plan is not None:
+            p = self.partitioned_plan
+            out.update(
+                {
+                    "partition_stages": float(len(p.stages)),
+                    "partition_fps": p.fps,
+                    "partition_latency_s": p.latency_s,
+                    "partition_bottleneck_s": p.bottleneck_s,
+                    "partition_stall_s": sum(
+                        s.plan.total_stall for s in p.stages
+                    ),
+                }
+            )
         return out
 
 
@@ -352,3 +376,18 @@ def plan_model_streaming(
         for i, (name, n, m, p) in enumerate(model_gemms(cfg, batch_tokens))
     ]
     return plan_streaming(tiles, pu)
+
+
+def plan_partitioned_streaming(
+    cfg: ModelConfig,
+    pus: Sequence[PUConfig],
+    batch_tokens: int = 8,
+) -> PartitionedPlan:
+    """Split one decode round's GEMM sequence across several PU profiles.
+
+    Contiguous GEMM ranges are balanced on each profile's exec-time model
+    and each stage gets its own two-phase schedule (capacity + load
+    channel per PU) -- the served model streams across the whole fleet
+    instead of replicating frames.
+    """
+    return partition_gemms(model_gemms(cfg, batch_tokens), list(pus))

@@ -3,8 +3,9 @@ named rule-sets used by the dry-run."""
 import pytest
 
 import jax
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import abstract_mesh
 from repro.parallel.sharding import (
     NAMED_RULES,
     RULES_DP_ONLY,
@@ -12,8 +13,8 @@ from repro.parallel.sharding import (
     resolve_spec,
 )
 
-MESH_1POD = AbstractMesh((16, 16), ("data", "model"))
-MESH_2POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH_1POD = abstract_mesh((16, 16), ("data", "model"))
+MESH_2POD = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_batch_shards_over_pod_and_data():
@@ -64,7 +65,8 @@ def test_partial_divisibility_keeps_prefix():
     spec = resolve_spec(("batch",), MESH_2POD, RULES_FSDP_TP, dims=(32,))
     assert spec == P(("pod", "data"))
     spec2 = resolve_spec(("batch",), MESH_2POD, RULES_FSDP_TP, dims=(2,))
-    assert spec2 == P(("pod",))
+    # jax >= 0.5 normalizes the singleton tuple to the bare name
+    assert spec2 in (P(("pod",)), P("pod"))
 
 
 def test_named_rules_registry():

@@ -8,14 +8,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.pu import PUConfig, PU_2X, host_offload_config
+from repro.core.pu import PUConfig, PU_2X, TileCost, host_offload_config
 from repro.core.streaming import (
     StreamingExecutor,
+    StreamingPlan,
     WeightTile,
     gemm_sequence_tiles,
     plan_streaming,
 )
 from repro.kernels import ref
+from repro.plan import plan as plan_tiles
 from repro.runtime.serving import model_gemms, plan_model_streaming
 
 
@@ -82,6 +84,39 @@ def test_executor_streamed_equals_resident_gemm(rng):
     got = jnp.concatenate(outs, axis=0)
     want = ref.int8_gemm_ref(w, x, shift=6)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_executor_fetches_follow_plan_issue_order():
+    """The load channel is serial: fetches must follow the plan's issue
+    queue (sorted by (window, tile)), including adaptive relocations that
+    move a later tile's load ahead of earlier tiles' loads."""
+    # tile3's 4s load cannot hide in tile2's 1s window but fits tile0's
+    # 6s window: the adaptive phase relocates it, putting tile3's load
+    # *before* tile2's on the channel.
+    costs = [
+        TileCost(load_s=1.0, exec_s=6.0, mem_bytes=10),
+        TileCost(load_s=1.0, exec_s=1.0, mem_bytes=10),
+        TileCost(load_s=1.0, exec_s=1.0, mem_bytes=10),
+        TileCost(load_s=4.0, exec_s=1.0, mem_bytes=10),
+    ]
+    p = plan_tiles(costs, capacity=100)
+    assert list(p.windows) == [-1, 0, 1, 0]
+
+    wtiles = [
+        WeightTile(name=f"t{i}", layer_index=i, n=1, m=1, p=1)
+        for i in range(4)
+    ]
+    pu = PUConfig(name="x", fast_mem_bytes=100)
+    splan = StreamingPlan(tiles=wtiles, plan=p, pu=pu)
+    assert splan.issue_order() == [0, 1, 3, 2]
+
+    ex = StreamingExecutor(splan, fetch=lambda name: name)
+    outs = ex.run([lambda w: w for _ in wtiles])
+    # fetched strictly in plan issue order, executed in index order
+    assert ex.fetches == ["t0", "t1", "t3", "t2"]
+    assert ex.fetches == [name for name, _ in splan.prefetch_order()]
+    assert outs == ["t0", "t1", "t2", "t3"]
+    assert ex.peak_resident_bytes <= pu.fast_mem_bytes
 
 
 def test_infeasible_plan_raises(rng):
