@@ -1,0 +1,121 @@
+"""CI perf-regression gate over the committed benchmark baselines.
+
+    PYTHONPATH=src python benchmarks/check_regression.py [--ref HEAD]
+
+Compares the freshly written ``BENCH_plan.json`` (and, when present,
+``BENCH_stream.json``) at the repo root against the version committed at
+``--ref`` (read via ``git show``, so the working-tree file can be the
+candidate even though the bench overwrote it in place).
+
+Gates:
+- ``BENCH_plan.json``: adaptive-phase stall reduction per workload and
+  the K=2 pipeline gain must not regress below the committed baseline
+  (small absolute/relative slack for float noise); the incremental-
+  planner speedup, when both files carry it, must not collapse (wall
+  time is noisy on shared runners, so the slack is generous).
+- ``BENCH_stream.json``: the PR's acceptance floor, independent of any
+  baseline -- measured K=2 gain >= 1.2x the best single-PU executor and
+  measured bubble within 2x of the analytic prediction.
+
+Exit code 1 on any regression, with one line per violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def committed(name: str, ref: str) -> dict | None:
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{ref}:{name}"],
+            capture_output=True, text=True, check=True, cwd=ROOT,
+        ).stdout
+        return json.loads(out)
+    except (subprocess.CalledProcessError, json.JSONDecodeError):
+        return None
+
+
+def check_plan(base: dict, cand: dict, errors: list[str]) -> None:
+    for wl in ("resnet18", "resnet50", "olmo_1b_decode"):
+        b, c = base.get(wl), cand.get(wl)
+        if not (b and c):
+            continue
+        # deterministic planner outputs: tight absolute slack only
+        if c["stall_reduction"] < b["stall_reduction"] - 1e-6:
+            errors.append(
+                f"plan/{wl}: stall_reduction {c['stall_reduction']:.4f} "
+                f"< baseline {b['stall_reduction']:.4f}"
+            )
+        if "speedup" in b and "speedup" in c:
+            # wall-clock ratio: allow 50% noise, catch collapses
+            if c["speedup"] < 0.5 * b["speedup"]:
+                errors.append(
+                    f"plan/{wl}: incremental speedup {c['speedup']:.1f}x "
+                    f"collapsed (baseline {b['speedup']:.1f}x)"
+                )
+    b = base.get("partition_resnet50_k2")
+    c = cand.get("partition_resnet50_k2")
+    if b and c and c["pipeline_gain"] < b["pipeline_gain"] - 0.02:
+        errors.append(
+            f"plan/partition: K=2 pipeline_gain {c['pipeline_gain']:.3f} "
+            f"< baseline {b['pipeline_gain']:.3f}"
+        )
+
+
+def check_stream(cand: dict, errors: list[str]) -> None:
+    gain = cand.get("k2_gain_measured", 0.0)
+    if gain < 1.2:
+        errors.append(
+            f"stream: measured K=2 gain {gain:.3f}x < 1.2x acceptance floor"
+        )
+    ratio = cand.get("k2_bubble_vs_predicted")
+    if ratio is not None and ratio > 2.0:
+        errors.append(
+            f"stream: measured bubble {ratio:.2f}x the analytic "
+            "prediction (> 2x acceptance bound)"
+        )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref holding the committed baselines")
+    ap.add_argument("--require-stream", action="store_true",
+                    help="fail when BENCH_stream.json is absent (CI runs "
+                         "the stream bench immediately before this gate)")
+    args = ap.parse_args()
+
+    errors: list[str] = []
+    plan_path = ROOT / "BENCH_plan.json"
+    if plan_path.exists():
+        base = committed("BENCH_plan.json", args.ref)
+        if base is None:
+            print("no committed BENCH_plan.json baseline; skipping plan gate")
+        else:
+            check_plan(base, json.loads(plan_path.read_text()), errors)
+    else:
+        errors.append("BENCH_plan.json missing (run `benchmarks.run --only plan` first)")
+
+    stream_path = ROOT / "BENCH_stream.json"
+    if stream_path.exists():
+        check_stream(json.loads(stream_path.read_text()), errors)
+    elif args.require_stream:
+        errors.append(
+            "BENCH_stream.json missing (run `benchmarks.run --only stream`)"
+        )
+
+    for e in errors:
+        print(f"REGRESSION: {e}")
+    if not errors:
+        print("benchmark gates OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -255,6 +255,8 @@ def simulate_partitioned(
         list(pus),
         latency_s=lambda pu, l: simulate_layer(pu, l, r_g).latency_s,
         tiles_of=lambda pu, l: pu.gemm_tiles(l.n, l.m, l.p),
+        name_of=lambda l: l.name,
+        act_bytes_of=lambda l: l.m * l.p,
     )
 
 
@@ -291,3 +293,34 @@ class FleetSim:
     @property
     def fps_per_tops(self) -> float:
         return self.fps / self.tops
+
+    def execute_pipelines(self, n_microbatches: int = 4) -> dict:
+        """Executed mode: validate the analytic pipeline numbers against
+        the real stage-parallel runtime.
+
+        Each partitioned pipeline is run through
+        ``runtime.pipeline_exec.StagePipelineExecutor`` (stage threads,
+        prefetch workers, bounded handoff queues) and the measured
+        throughput/bubble is reported next to the analytic prediction.
+        ``measured_vs_analytic`` below 1.0 is the pipeline-fill cost the
+        additive model ignores; a large gap flags a runtime/cost-model
+        divergence.
+        """
+        from repro.runtime.pipeline_exec import execute_partitioned_plan
+
+        out = {}
+        for name, pplan, count in self.pipelines:
+            rep = execute_partitioned_plan(
+                pplan, n_microbatches=n_microbatches
+            )
+            out[name] = {
+                "count": count,
+                "analytic_fps": pplan.fps,
+                "predicted_fps": rep.predicted_fps,
+                "measured_fps": rep.measured_fps,
+                "measured_vs_analytic": rep.measured_fps / pplan.fps,
+                "bubble_measured": rep.bubble_measured,
+                "bubble_predicted": rep.bubble_predicted,
+                "wall_s": rep.wall_s,
+            }
+        return out

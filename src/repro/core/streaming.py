@@ -14,6 +14,8 @@ and the compute functionally, so every schedule property is testable.
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time as _time
 from typing import (
     TYPE_CHECKING, Any, Callable, Dict, List, Optional, Sequence, Tuple,
 )
@@ -66,8 +68,7 @@ class StreamingPlan:
         The load channel is serial and drains its queue sorted by
         ``(window, tile)``; this is the order the executor must fetch in.
         """
-        windows = self.plan.windows
-        return sorted(range(len(self.tiles)), key=lambda i: (windows[i], i))
+        return self.plan.issue_order()
 
     def prefetch_order(self) -> List[Tuple[str, int]]:
         """(tile name, window) in load-issue order."""
@@ -124,14 +125,152 @@ def gemm_sequence_tiles(
     return tiles
 
 
+class StageStreamCore:
+    """Residency-accounted prefetch/execute core of one streaming stage.
+
+    Owns one PU's fast-memory account.  The *prefetch side* walks the
+    plan's issue order -- the serial load channel drained sorted by
+    ``(window, tile)`` -- and never reorders it; the *execute side*
+    retires tiles strictly in inference (index) order and frees their
+    bytes at retire, exactly when the hardware's URAM slot frees.
+
+    The two sides may run on one thread, alternated by a plan-time gate
+    (:class:`StreamingExecutor`), or on separate threads with the
+    prefetch worker blocking on capacity (``runtime.pipeline_exec``) --
+    feasibility of the underlying plan guarantees the blocking mode is
+    deadlock-free: whenever the execute side waits on tile *i*, every
+    queue entry up to *i* fits alongside the not-yet-retired residents,
+    because the plan's verified peak residency at *i*'s exec covers
+    precisely that set.
+    """
+
+    def __init__(
+        self,
+        *,
+        costs: Sequence[int],            # mem_bytes per tile (index order)
+        capacity: int,
+        issue_order: Sequence[int],
+        fetch: Callable[[int], Any],     # tile index -> weights
+        names: Optional[Sequence[str]] = None,
+    ):
+        self.costs = list(costs)
+        self.capacity = capacity
+        self.issue_order = list(issue_order)
+        self._fetch = fetch
+        self.names = list(names) if names is not None else [
+            str(i) for i in range(len(self.costs))
+        ]
+        self._cond = threading.Condition()
+        self._resident: Dict[int, Any] = {}
+        self._resident_bytes = 0
+        self._qpos = 0
+        self._failed: Optional[BaseException] = None
+        self.peak_resident_bytes = 0
+        self.fetches: List[str] = []     # names, in actual fetch order
+
+    # -- prefetch side ------------------------------------------------------
+
+    def next_issue(self) -> Optional[int]:
+        """Peek the next tile in issue order without fetching it."""
+        with self._cond:
+            if self._qpos >= len(self.issue_order):
+                return None
+            return self.issue_order[self._qpos]
+
+    def issue_next(self, *, block: bool) -> Optional[int]:
+        """Fetch the next tile in issue order; returns its index.
+
+        ``block=True`` (async worker) waits until the tile fits in fast
+        memory -- the load channel stalling on URAM space; ``block=False``
+        (plan-time-gated sync driver) asserts it fits, because the caller
+        only issues loads the verified schedule has already started.
+        """
+        with self._cond:
+            if self._qpos >= len(self.issue_order):
+                return None
+            j = self.issue_order[self._qpos]
+            need = self.costs[j]
+            if block:
+                while self._resident_bytes + need > self.capacity:
+                    if self._failed is not None:
+                        return None
+                    self._cond.wait(timeout=60.0)
+            else:
+                assert self._resident_bytes + need <= self.capacity, (
+                    f"residency {self._resident_bytes + need} exceeds "
+                    f"capacity {self.capacity}"
+                )
+            self._qpos += 1
+        # fetch outside the lock: callbacks may be slow (host DMA, disk)
+        try:
+            w = self._fetch(j)
+        except BaseException as e:
+            with self._cond:
+                self._failed = e
+                self._cond.notify_all()
+            raise
+        with self._cond:
+            self._resident[j] = w
+            self._resident_bytes += need
+            self.fetches.append(self.names[j])
+            self.peak_resident_bytes = max(
+                self.peak_resident_bytes, self._resident_bytes
+            )
+            self._cond.notify_all()
+        return j
+
+    def prefetch_all(self) -> None:
+        """Blocking-worker loop: drain the whole issue queue."""
+        while self.issue_next(block=True) is not None:
+            pass
+
+    # -- execute side -------------------------------------------------------
+
+    def is_resident(self, i: int) -> bool:
+        with self._cond:
+            return i in self._resident
+
+    def acquire(self, i: int, timeout: float = 120.0) -> Any:
+        """Block until tile *i* is resident; return its weights."""
+        deadline = _time.monotonic() + timeout
+        with self._cond:
+            while i not in self._resident:
+                if self._failed is not None:
+                    raise RuntimeError(
+                        f"prefetch worker failed: {self._failed!r}"
+                    ) from self._failed
+                remaining = deadline - _time.monotonic()
+                if remaining <= 0 or not self._cond.wait(timeout=remaining):
+                    raise RuntimeError(
+                        f"tile {i} not resident after {timeout}s "
+                        "(prefetch stalled?)"
+                    )
+            return self._resident[i]
+
+    def release(self, i: int) -> None:
+        with self._cond:
+            del self._resident[i]
+            self._resident_bytes -= self.costs[i]
+            self._cond.notify_all()
+
+    def abort(self, exc: BaseException) -> None:
+        """Unblock both sides after a failure on either."""
+        with self._cond:
+            self._failed = exc
+            self._cond.notify_all()
+
+
 class StreamingExecutor:
-    """Execute a tiled computation under a streaming plan.
+    """Execute a tiled computation under a streaming plan (one PU).
 
     ``tile_fns[i]`` computes tile *i*'s output given its weights; weights
     are fetched via ``fetch(tile_name)`` no earlier than the plan's issue
     order allows, and evicted once executed (bounded residency).  The
     executor asserts the plan's memory bound at runtime -- it is the
-    software twin of the hardware's URAM allocator.
+    software twin of the hardware's URAM allocator.  Prefetch and compute
+    are interleaved on the calling thread, gated by the plan's timeline;
+    the stage-parallel runtime (``runtime.pipeline_exec``) drives the same
+    :class:`StageStreamCore` with a concurrent prefetch worker instead.
     """
 
     def __init__(
@@ -141,8 +280,6 @@ class StreamingExecutor:
     ):
         self.plan = plan
         self.fetch = fetch
-        self._resident: Dict[int, Any] = {}
-        self._resident_bytes = 0
         self.peak_resident_bytes = 0
         self.fetches: List[str] = []
 
@@ -157,32 +294,37 @@ class StreamingExecutor:
         # load_start with an exemption for tile i's own load could pull a
         # late load ahead of queued earlier ones, breaking the residency
         # account the schedule was verified against.
-        issue_order = self.plan.issue_order()
-        costs = [schedule.tiles[i].mem_bytes for i in range(len(tiles))]
+        core = StageStreamCore(
+            costs=[schedule.tiles[i].mem_bytes for i in range(len(tiles))],
+            capacity=self.plan.pu.fast_mem_bytes,
+            issue_order=self.plan.issue_order(),
+            fetch=lambda j: self.fetch(tiles[j].name),
+            names=[t.name for t in tiles],
+        )
         outputs: List[Optional[Any]] = [None] * len(tiles)
-        qpos = 0
-        for i in range(len(tiles)):
-            # Issue, in plan order, every prefetch the plan starts no later
-            # than tile i's execution.  Tile i's own load is always among
-            # them: its load_start precedes its exec_start, and everything
-            # queued before it starts no later still.
-            while qpos < len(issue_order):
-                j = issue_order[qpos]
-                if schedule.tiles[j].load_start > schedule.tiles[i].exec_start:
-                    break
-                if j not in self._resident:
-                    self._resident[j] = self.fetch(tiles[j].name)
-                    self._resident_bytes += costs[j]
-                    self.fetches.append(tiles[j].name)
-                    self.peak_resident_bytes = max(
-                        self.peak_resident_bytes, self._resident_bytes
-                    )
-                    assert self._resident_bytes <= self.plan.pu.fast_mem_bytes, (
-                        f"residency {self._resident_bytes} exceeds capacity"
-                    )
-                qpos += 1
-            assert i in self._resident, f"tile {i} executed before its load"
-            outputs[i] = tile_fns[i](self._resident[i])
-            self._resident_bytes -= costs[i]
-            del self._resident[i]
+        try:
+            for i in range(len(tiles)):
+                # Issue, in plan order, every prefetch the plan starts no
+                # later than tile i's execution.  Tile i's own load is
+                # always among them: its load_start precedes its
+                # exec_start, and everything queued before it starts no
+                # later still.
+                while True:
+                    j = core.next_issue()
+                    if j is None or (
+                        schedule.tiles[j].load_start
+                        > schedule.tiles[i].exec_start
+                    ):
+                        break
+                    core.issue_next(block=False)
+                assert core.is_resident(i), (
+                    f"tile {i} executed before its load"
+                )
+                outputs[i] = tile_fns[i](core.acquire(i))
+                core.release(i)
+        finally:
+            # publish even on failure: the partial fetch order is the
+            # first thing debugging a mid-run fault needs
+            self.peak_resident_bytes = core.peak_resident_bytes
+            self.fetches = core.fetches
         return outputs

@@ -64,3 +64,39 @@ def make_mesh(shape, axes) -> Mesh:
 
 def single_device_mesh() -> Mesh:
     return make_mesh((1,), ("data",))
+
+
+def stage_submeshes(mesh: Mesh, n_stages: int):
+    """Split a mesh's devices into ``n_stages`` submeshes for pipeline
+    stages, preserving the trailing axes so partitioned streaming
+    composes with tensor sharding.
+
+    The leading axis is divided when it splits evenly (e.g. a
+    ``(data=4, model=4)`` mesh into 2 stages of ``(data=2, model=4)``);
+    otherwise the flat device list is divided and each group becomes a
+    1-D ``("model",)`` submesh (tensor sharding inside the stage).  When
+    the device count cannot be split K ways (notably 1-device CPU), all
+    stages *share* the full mesh -- returned as K references with
+    ``shared=True`` -- so callers can still place per-stage computations
+    without special-casing.
+
+    Returns ``(submeshes, shared)``.
+    """
+    import numpy as np
+
+    devices = np.asarray(mesh.devices)
+    lead = devices.shape[0]
+    total = devices.size
+    if n_stages <= 1:
+        return [mesh] * max(n_stages, 1), False
+    if lead % n_stages == 0 and lead >= n_stages:
+        groups = np.split(devices, n_stages, axis=0)
+        return (
+            [Mesh(g, mesh.axis_names) for g in groups],
+            False,
+        )
+    if total % n_stages == 0 and total >= n_stages:
+        flat = devices.reshape(-1)
+        groups = np.split(flat, n_stages)
+        return [Mesh(g, ("model",)) for g in groups], False
+    return [mesh] * n_stages, True

@@ -132,6 +132,14 @@ class ExecutionPlan:
     def weight_bytes(self) -> int:
         return int(sum(t.mem_bytes for t in self.tiles))
 
+    def issue_order(self) -> List[int]:
+        """Tile indices in load-channel issue order.
+
+        The load channel is serial and drains its queue sorted by
+        ``(window, tile)``; every executor must fetch in this order.
+        """
+        return sorted(range(self.n), key=lambda i: (self.windows[i], i))
+
     def relocations(self) -> List[Tuple[int, int, int]]:
         """(tile, from_window, to_window) moved by the adaptive phase."""
         return [
@@ -202,6 +210,59 @@ class ExecutionPlan:
         return sched.TwoPhaseResult(
             baseline=self.to_schedule("baseline"),
             adaptive=self.to_schedule("adaptive"),
+        )
+
+    # ---- persistence ----------------------------------------------------
+
+    def to_json_dict(self) -> dict:
+        """Loss-free JSON form (floats round-trip exactly via repr)."""
+        def tl(t: Timeline) -> dict:
+            return {
+                "load_start": t.load_start.tolist(),
+                "load_end": t.load_end.tolist(),
+                "exec_start": t.exec_start.tolist(),
+                "exec_end": t.exec_end.tolist(),
+                "feasible": t.feasible,
+            }
+
+        return {
+            "version": 1,
+            "tiles": [[t.load_s, t.exec_s, t.mem_bytes] for t in self.tiles],
+            "capacity": self.capacity,
+            "preload_first": self.preload_first,
+            "baseline_windows": list(self.baseline_windows),
+            "windows": list(self.windows),
+            "baseline": tl(self.baseline),
+            "timeline": tl(self.timeline),
+            "plan_wall_s": self.plan_wall_s,
+        }
+
+    @staticmethod
+    def from_json_dict(d: dict) -> "ExecutionPlan":
+        if d.get("version") != 1:
+            raise ValueError(f"unknown plan version {d.get('version')!r}")
+
+        def tl(x: dict) -> Timeline:
+            return Timeline(
+                load_start=np.asarray(x["load_start"], np.float64),
+                load_end=np.asarray(x["load_end"], np.float64),
+                exec_start=np.asarray(x["exec_start"], np.float64),
+                exec_end=np.asarray(x["exec_end"], np.float64),
+                feasible=bool(x["feasible"]),
+            )
+
+        return ExecutionPlan(
+            tiles=tuple(
+                TileCost(load_s=l, exec_s=e, mem_bytes=int(m))
+                for l, e, m in d["tiles"]
+            ),
+            capacity=int(d["capacity"]),
+            preload_first=bool(d["preload_first"]),
+            baseline_windows=tuple(int(w) for w in d["baseline_windows"]),
+            windows=tuple(int(w) for w in d["windows"]),
+            baseline=tl(d["baseline"]),
+            timeline=tl(d["timeline"]),
+            plan_wall_s=float(d.get("plan_wall_s", 0.0)),
         )
 
     def summary(self) -> dict:

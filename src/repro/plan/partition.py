@@ -33,18 +33,35 @@ from repro.plan.ir import ExecutionPlan
 
 @dataclasses.dataclass(frozen=True)
 class StagePlan:
-    """One pipeline stage: a contiguous layer range on one PU."""
+    """One pipeline stage: a contiguous layer range on one PU.
+
+    Beyond the stage's own two-phase schedule, the stage carries the
+    *handoff metadata* the stage-parallel runtime needs: named tiles
+    grouped by consuming layer (so an executor can fold tile outputs
+    back into per-layer activations) and the inbound-activation transfer
+    charged on the stage boundary (the inter-stage buffering cost the
+    FPGA survey flags as the pipeline-scalability bottleneck).
+    """
 
     pu: PUConfig
     layer_start: int
     layer_stop: int                  # exclusive
     plan: ExecutionPlan              # two-phase plan of the stage's tiles
     compute_s: float                 # all-weights-resident stage latency
+    tile_names: Tuple[str, ...] = ()       # one per plan tile, index order
+    tiles_per_layer: Tuple[int, ...] = ()  # tile count per local layer
+    handoff_in_bytes: int = 0        # activation bytes entering the stage
+    handoff_in_s: float = 0.0        # inbound transfer time per frame
 
     @property
     def stage_s(self) -> float:
         """Stage time per frame: compute plus weight-streaming stalls."""
         return self.compute_s + self.plan.total_stall
+
+    @property
+    def stage_s_with_handoff(self) -> float:
+        """Stage occupancy per frame including the inbound handoff."""
+        return self.stage_s + self.handoff_in_s
 
     @property
     def n_layers(self) -> int:
@@ -81,6 +98,44 @@ class PartitionedPlan:
     def fps_per_tops(self) -> float:
         return self.fps / self.tops
 
+    # ---- pipeline-dynamics predictions (microbatched execution) -------
+
+    def bubble_prediction(self, n_microbatches: int) -> float:
+        """GPipe fill/drain bubble floor: (K-1)/(M+K-1).
+
+        Shared with ``parallel.pipeline.bubble_fraction`` so the
+        executed pipeline and the shard_map runner are checked against
+        the same analytic model.
+        """
+        from repro.parallel.pipeline import bubble_fraction
+
+        return bubble_fraction(len(self.stages), n_microbatches)
+
+    def pipeline_events(
+        self, n_microbatches: int
+    ) -> "np.ndarray":
+        """Predicted (K, M) completion times of every (stage, frame).
+
+        Exact recurrence of the synchronous pipeline the executor runs:
+        ``done[k][f] = max(done[k][f-1], done[k-1][f] + handoff_k)
+        + stage_s_k`` with all microbatches available to stage 0 at t=0.
+        """
+        K, M = len(self.stages), n_microbatches
+        done = np.zeros((K, M))
+        for k, s in enumerate(self.stages):
+            for f in range(M):
+                ready = done[k - 1, f] + s.handoff_in_s if k else 0.0
+                prev = done[k, f - 1] if f else 0.0
+                done[k, f] = max(ready, prev) + s.stage_s
+        return done
+
+    def pipeline_makespan(self, n_microbatches: int) -> float:
+        return float(self.pipeline_events(n_microbatches)[-1, -1])
+
+    def pipeline_fps(self, n_microbatches: int) -> float:
+        """Predicted throughput of an M-microbatch burst (incl. fill)."""
+        return n_microbatches / self.pipeline_makespan(n_microbatches)
+
     def summary(self) -> dict:
         return {
             "stages": [
@@ -91,6 +146,8 @@ class PartitionedPlan:
                     "stall_s": s.plan.total_stall,
                     "stage_s": s.stage_s,
                     "tiles": s.plan.n,
+                    "handoff_in_bytes": s.handoff_in_bytes,
+                    "handoff_in_s": s.handoff_in_s,
                 }
                 for s in self.stages
             ],
@@ -148,6 +205,8 @@ def partition_layers(
     *,
     latency_s,
     tiles_of,
+    name_of=None,
+    act_bytes_of=None,
     use_cache: bool = True,
 ) -> PartitionedPlan:
     """Partition an arbitrary layer sequence across ``pus``.
@@ -155,25 +214,55 @@ def partition_layers(
     ``latency_s(pu, layer) -> float`` costs one layer on one PU (drives
     the balancing DP and the stage compute account); ``tiles_of(pu,
     layer) -> [TileCost]`` produces the stage's schedulable tiles.
+    ``name_of(layer) -> str`` names the layer's tiles (executor handoff
+    metadata); ``act_bytes_of(layer) -> int`` sizes the layer's *input*
+    activations, charged as the handoff into the stage that starts with
+    that layer.
+
+    Degenerate shapes fall back to the single-PU path rather than
+    producing empty stages: K > L cannot fill K non-empty contiguous
+    ranges, so the whole model is planned as one stage on ``pus[0]``
+    (K = 1 is the same path via the trivial DP).
     """
     from repro.plan.cache import plan_cached
     from repro.plan.planner import plan as _plan
 
     K = len(pus)
+    L = len(layers)
     if K == 0:
         raise ValueError("need at least one PU profile")
+    if L == 0:
+        raise ValueError("need at least one layer")
+    if K > L:
+        pus = pus[:1]
+        K = 1
+    if name_of is None:
+        name_of = lambda l: getattr(l, "name", None) or f"layer{id(l)}"
     costs = np.array([[latency_s(pu, l) for l in layers] for pu in pus])
     ranges = balance_layer_ranges(costs)
 
     stages = []
     for s, (pu, (start, stop)) in enumerate(zip(pus, ranges)):
-        tiles = []
-        for layer in layers[start:stop]:
-            tiles.extend(tiles_of(pu, layer))
+        tiles: List = []
+        tile_names: List[str] = []
+        tiles_per_layer: List[int] = []
+        for li, layer in enumerate(layers[start:stop]):
+            layer_tiles = tiles_of(pu, layer)
+            base = name_of(layer)
+            tiles_per_layer.append(len(layer_tiles))
+            tile_names.extend(
+                f"{base}/t{j}" for j in range(len(layer_tiles))
+            )
+            tiles.extend(layer_tiles)
         if use_cache:
             stage_plan = plan_cached(tiles, pu.fast_mem_bytes)
         else:
             stage_plan = _plan(tiles, pu.fast_mem_bytes)
+        handoff_bytes = (
+            int(act_bytes_of(layers[start]))
+            if (s > 0 and act_bytes_of is not None)
+            else 0
+        )
         stages.append(
             StagePlan(
                 pu=pu,
@@ -181,6 +270,10 @@ def partition_layers(
                 layer_stop=stop,
                 plan=stage_plan,
                 compute_s=float(costs[s, start:stop].sum()),
+                tile_names=tuple(tile_names),
+                tiles_per_layer=tuple(tiles_per_layer),
+                handoff_in_bytes=handoff_bytes,
+                handoff_in_s=handoff_bytes / pu.act_bw_bytes_per_s,
             )
         )
     return PartitionedPlan(stages=tuple(stages))
@@ -207,5 +300,8 @@ def partition_gemms(
         pus,
         latency_s=layer_latency_s,
         tiles_of=lambda pu, g: pu.gemm_tiles(g[1], g[2], g[3]),
+        name_of=lambda g: g[0],
+        # inbound activations of (name, N, M, P): the M x P int8 operand
+        act_bytes_of=lambda g: g[2] * g[3],
         use_cache=use_cache,
     )

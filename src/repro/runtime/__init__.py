@@ -1,4 +1,6 @@
 """Distributed runtime: step factories, fault-tolerant train loop,
 
-batched serving engine with the paper's weight-streaming scheduler.
+batched serving engine with the paper's weight-streaming scheduler, and
+the stage-parallel multi-PU streaming executor (``pipeline_exec``) that
+runs partitioned plans for real.
 """

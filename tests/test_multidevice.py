@@ -70,6 +70,37 @@ def test_pipeline_microbatch_counts():
     assert "MB_OK" in out
 
 
+def test_stage_submeshes_split_devices():
+    """Partitioned streaming composes with tensor sharding: a (2,2)
+    data/model mesh splits into 2 disjoint stage submeshes that keep the
+    model axis, and an odd split falls back to sharing the full mesh."""
+    out = run_py("""
+        import jax
+        from repro.launch.mesh import make_mesh, stage_submeshes
+
+        mesh = make_mesh((2, 2), ("data", "model"))
+        subs, shared = stage_submeshes(mesh, 2)
+        assert not shared
+        assert len(subs) == 2
+        assert all(m.axis_names == ("data", "model") for m in subs)
+        assert all(m.devices.shape == (1, 2) for m in subs)
+        ids = [sorted(d.id for d in m.devices.ravel()) for m in subs]
+        assert ids[0] + ids[1] == sorted(d.id for d in jax.devices())
+
+        # 4 devices into 3 stages cannot split: shared fallback
+        subs3, shared3 = stage_submeshes(mesh, 3)
+        assert shared3 and len(subs3) == 3
+
+        # flat fallback: leading axis indivisible but total divides
+        flat = make_mesh((1, 4), ("data", "model"))
+        subs2, shared2 = stage_submeshes(flat, 2)
+        assert not shared2
+        assert all(m.axis_names == ("model",) for m in subs2)
+        print("SUBMESH_OK")
+    """)
+    assert "SUBMESH_OK" in out
+
+
 def test_int8_psum_mean():
     out = run_py("""
         import functools

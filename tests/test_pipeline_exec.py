@@ -1,0 +1,383 @@
+"""Stage-parallel streaming runtime: a PartitionedPlan as a runnable
+artifact.  Ordering invariants (per-stage prefetch honors plan issue
+order), functional determinism vs the scan reference, stall parity with
+the single-PU executor, pipeline dynamics vs the analytic model, and
+the serving/FleetSim integrations."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.core.pu import PU_1X, PU_2X, PUConfig, TileCost, host_offload_config, tpu_v5e_config
+from repro.core import simulator as sim
+from repro.core.streaming import gemm_sequence_tiles, plan_streaming
+from repro.models import api as model_api
+from repro.parallel.pipeline import bubble_fraction, sequential_apply
+from repro.plan import partition_gemms, partition_layers
+from repro.runtime.pipeline_exec import (
+    StagePipelineExecutor,
+    execute_partitioned_plan,
+)
+from repro.runtime.serving import ServeConfig, ServingEngine
+
+
+BIG_PU = PUConfig(
+    name="big", r_sa=8, c_sa=8, fast_clock_hz=1e6,
+    fast_mem_bytes=1 << 24, weight_bw_bytes_per_s=1e9,
+    act_bw_bytes_per_s=1e9,
+)
+
+
+def _linear_chain_partition(ws, pus, load_s=0.1):
+    """One tile per layer; layer i is a (D, D) weight matrix ws[i]."""
+    layers = [(f"l{i}", w) for i, w in enumerate(ws)]
+    return partition_layers(
+        layers,
+        pus,
+        latency_s=lambda pu, l: 1.0,
+        tiles_of=lambda pu, l: [
+            TileCost(load_s=load_s, exec_s=1.0, mem_bytes=l[1].nbytes)
+        ],
+        name_of=lambda l: l[0],
+        act_bytes_of=lambda l: l[1].shape[0],
+        use_cache=False,
+    )
+
+
+# ------------------------------------------------- ordering invariants ----
+
+
+def test_prefetch_never_overtakes_issue_order():
+    """The relocation workload from test_streaming: tile 3's load moves
+    into tile 0's window, so issue order is [0, 1, 3, 2] -- every frame's
+    fetch sequence must follow it, never inference order."""
+    costs = [
+        TileCost(load_s=1.0, exec_s=6.0, mem_bytes=10),
+        TileCost(load_s=1.0, exec_s=1.0, mem_bytes=10),
+        TileCost(load_s=1.0, exec_s=1.0, mem_bytes=10),
+        TileCost(load_s=4.0, exec_s=1.0, mem_bytes=10),
+    ]
+    pu = PUConfig(name="t", fast_mem_bytes=100)
+    pplan = partition_layers(
+        list(range(4)),
+        [pu],
+        latency_s=lambda p, l: 1.0,
+        tiles_of=lambda p, l: [costs[l]],
+        name_of=lambda l: f"l{l}",
+        use_cache=False,
+    )
+    st = pplan.stages[0]
+    assert st.plan.issue_order() == [0, 1, 3, 2]
+    rep = execute_partitioned_plan(
+        pplan, n_microbatches=3, record_fetch_orders=True
+    )
+    want = [st.tile_names[i] for i in st.plan.issue_order()]
+    assert want == ["l0/t0", "l1/t0", "l3/t0", "l2/t0"]
+    assert rep.stages[0].fetch_orders == [want] * 3
+
+
+def test_multi_stage_fetch_orders_follow_each_plan():
+    gemms = [(f"g{i}", 16, 32, 8) for i in range(6)]
+    pplan = partition_gemms(gemms, [BIG_PU, BIG_PU])
+    rep = execute_partitioned_plan(
+        pplan, n_microbatches=4, record_fetch_orders=True
+    )
+    for k, st in enumerate(pplan.stages):
+        want = [st.tile_names[i] for i in st.plan.issue_order()]
+        assert rep.stages[k].fetch_orders == [want] * 4
+        assert rep.stages[k].peak_resident_bytes <= st.pu.fast_mem_bytes
+
+
+# ------------------------------------------- functional determinism -------
+
+
+def test_matches_sequential_apply():
+    """Final activations through the K-stage threaded pipeline equal the
+    plain sequential scan (parallel.pipeline.sequential_apply)."""
+    L, B, D, M = 8, 8, 16, 4
+    key = jax.random.PRNGKey(0)
+    stacked = jax.random.normal(key, (L, D, D)) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+    layer_fn = lambda w, h: jnp.tanh(h @ w)
+    ref = sequential_apply(layer_fn, stacked, x)
+
+    ws = [np.asarray(stacked[i]) for i in range(L)]
+    pplan = _linear_chain_partition(ws, [BIG_PU, BIG_PU])
+    assert [s.n_layers for s in pplan.stages] == [4, 4]
+
+    def fetch(k, i, name):
+        st = pplan.stages[k]
+        return ws[st.layer_start + i]        # one tile per layer
+
+    def run_tile(k, i, w, carry):
+        return np.tanh(carry @ w)
+
+    mbs = np.split(np.asarray(x), M)
+    ex = StagePipelineExecutor(pplan, fetch=fetch, run_tile=run_tile)
+    rep = ex.run(mbs)
+    got = np.concatenate(rep.outputs, axis=0)
+    np.testing.assert_allclose(got, np.asarray(ref), atol=1e-5)
+
+
+def test_outputs_keep_microbatch_order():
+    pplan = _linear_chain_partition(
+        [np.eye(4, dtype=np.float32)] * 6, [BIG_PU, BIG_PU, BIG_PU]
+    )
+    rep = execute_partitioned_plan(
+        pplan, n_microbatches=5, payloads=["a", "b", "c", "d", "e"]
+    )
+    assert rep.outputs == ["a", "b", "c", "d", "e"]
+    # completion times strictly increase: frames drain in order
+    assert all(
+        t1 < t2 for t1, t2 in zip(rep.frame_done_t, rep.frame_done_t[1:])
+    )
+
+
+# ------------------------------------------------- stall/bubble parity ----
+
+
+def test_single_stage_stall_matches_single_pu_executor():
+    """A 1-stage partition is exactly the single-PU path: same tiles,
+    same plan, stall count no worse (equal)."""
+    gemms = [(f"g{i}", 8, 16, 4) for i in range(6)]
+    pu = PUConfig(
+        name="tiny", r_sa=4, c_sa=4, fast_clock_hz=1e6,
+        fast_mem_bytes=512, weight_bw_bytes_per_s=1e6,
+        act_bw_bytes_per_s=1e6,
+    )
+    single = plan_streaming(gemm_sequence_tiles(gemms, pu), pu)
+    pplan = partition_gemms(gemms, [pu])
+    assert len(pplan.stages) == 1
+    M = 3
+    rep = execute_partitioned_plan(pplan, n_microbatches=M)
+    per_frame = rep.stages[0].stall_s / M
+    assert per_frame == pytest.approx(pplan.stages[0].plan.total_stall)
+    # no worse than the single-PU executor's plan on identical tiles
+    assert per_frame <= single.plan.total_stall + 1e-12
+    # single stage never starves and has zero fill bubble
+    assert rep.stages[0].starve_s == 0.0
+    assert rep.bubble_measured == pytest.approx(0.0, abs=1e-9)
+
+
+def test_executed_matches_predicted_recurrence():
+    """The threaded runtime's virtual event stream must reproduce the
+    analytic pipeline recurrence exactly -- stages genuinely overlap."""
+    gemms = [(f"g{i}", 16, 32, 8) for i in range(8)]
+    pplan = partition_gemms(gemms, [BIG_PU, BIG_PU])
+    M = 6
+    rep = execute_partitioned_plan(pplan, n_microbatches=M)
+    assert rep.makespan_s == pytest.approx(pplan.pipeline_makespan(M))
+    assert rep.measured_fps == pytest.approx(pplan.pipeline_fps(M))
+    want_done = pplan.pipeline_events(M)[-1]
+    np.testing.assert_allclose(rep.frame_done_t, want_done)
+
+
+# --------------------------------------------- ResNet-50 K=2 criteria -----
+
+
+def test_resnet50_k2_throughput_and_bubble():
+    """The PR's acceptance numbers: K=2 executed throughput >= 1.2x the
+    best single-PU executor, bubble within 2x of the GPipe prediction."""
+    layers = sim.resnet_gemm_layers(50)
+    M = 8
+    singles = [
+        execute_partitioned_plan(
+            sim.simulate_partitioned([pu], layers), n_microbatches=M
+        )
+        for pu in (PU_1X, PU_2X)
+    ]
+    best_single_fps = max(r.measured_fps for r in singles)
+    rep = execute_partitioned_plan(
+        sim.simulate_partitioned([PU_1X, PU_2X], layers), n_microbatches=M
+    )
+    assert rep.measured_fps >= 1.2 * best_single_fps
+    predicted = bubble_fraction(2, M)
+    assert rep.bubble_predicted == pytest.approx(predicted)
+    assert rep.bubble_measured <= 2.0 * predicted
+    assert rep.bubble_measured >= 0.0
+    # the stages genuinely overlapped: at some point both were mid-frame
+    assert rep.max_concurrent_stages >= 2
+
+
+# ------------------------------------------------ integration surfaces ----
+
+
+def test_fleetsim_executed_mode():
+    layers = sim.resnet_gemm_layers(18)
+    pplan = sim.simulate_partitioned([PU_1X, PU_2X], layers)
+    fleet = sim.FleetSim(pipelines=[("k2", pplan, 1)])
+    out = fleet.execute_pipelines(n_microbatches=4)
+    rec = out["k2"]
+    assert rec["measured_fps"] == pytest.approx(rec["predicted_fps"])
+    # executed throughput trails the steady-state analytic number only
+    # by the fill bubble
+    assert 0.5 < rec["measured_vs_analytic"] <= 1.0 + 1e-9
+    assert rec["bubble_measured"] >= 0.0
+
+
+def _engine(arch="olmo-1b", **kw):
+    cfg = smoke_variant(get_config(arch))
+    api = model_api.get_api(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    defaults = dict(max_batch=2, max_len=64, max_new_tokens=4, seed=0)
+    defaults.update(kw)
+    return cfg, ServingEngine(cfg, params, ServeConfig(**defaults))
+
+
+def test_k2_decode_end_to_end_smoke():
+    """--multi-pu decode end to end: requests drain AND the partition
+    executes through the stage-parallel runtime."""
+    cfg, eng = _engine(
+        stream_pus=[host_offload_config(), tpu_v5e_config()]
+    )
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        eng.submit(rng.integers(0, cfg.vocab, 8).astype(np.int32))
+    done = eng.run_until_drained()
+    assert len(done) == 3
+    rep = eng.execute_partition(n_microbatches=4)
+    assert rep.n_stages == 2 and rep.n_microbatches == 4
+    s = eng.stats()
+    assert s["partition_executed_fps"] > 0
+    assert 0.0 < s["partition_executed_vs_analytic"] <= 1.0 + 1e-9
+    assert s["partition_bubble_measured"] >= 0.0
+    assert s["partition_bubble_predicted"] == pytest.approx(
+        bubble_fraction(2, 4)
+    )
+
+
+def test_stream_pus_k1_falls_back_to_single_pu_path():
+    cfg, eng = _engine(stream_pus=[host_offload_config()])
+    assert eng.partitioned_plan is None
+    assert eng.streaming_plan is not None
+    assert eng.streaming_plan.schedule.feasible
+    with pytest.raises(ValueError):
+        eng.execute_partition()
+
+
+def test_partition_k_exceeds_layers_guard():
+    gemms = [("a", 64, 64, 8), ("b", 64, 64, 8)]
+    pplan = partition_gemms(gemms, [host_offload_config()] * 5)
+    assert len(pplan.stages) == 1
+    assert pplan.stages[0].n_layers == 2
+    assert pplan.feasible
+    assert all(s.n_layers > 0 for s in pplan.stages)
+
+
+def test_handoff_metadata():
+    gemms = [("a", 64, 128, 8), ("b", 32, 64, 8)]
+    pplan = partition_gemms(gemms, [BIG_PU, BIG_PU])
+    s0, s1 = pplan.stages
+    assert s0.handoff_in_bytes == 0
+    # stage 1 starts at gemm "b": inbound acts are its (M=64) x (P=8) operand
+    assert s1.handoff_in_bytes == 64 * 8
+    assert s1.handoff_in_s == pytest.approx(64 * 8 / s1.pu.act_bw_bytes_per_s)
+    assert s1.stage_s_with_handoff == pytest.approx(
+        s1.stage_s + s1.handoff_in_s
+    )
+    assert s0.tile_names and len(s0.tile_names) == s0.plan.n
+    assert sum(s0.tiles_per_layer) == s0.plan.n
+
+
+def test_run_tile_error_propagates():
+    pplan = _linear_chain_partition(
+        [np.eye(4, dtype=np.float32)] * 4, [BIG_PU, BIG_PU]
+    )
+
+    def bad_tile(k, i, w, carry):
+        if k == 1 and i == 1:
+            raise RuntimeError("boom")
+        return carry
+
+    ex = StagePipelineExecutor(pplan, run_tile=bad_tile)
+    with pytest.raises(RuntimeError, match="boom"):
+        ex.run(list(range(3)))
+
+
+# ------------------------------------------------- plan persistence -------
+
+
+def test_execution_plan_json_roundtrip():
+    from repro.plan import plan as plan_tiles
+    from repro.plan.ir import ExecutionPlan
+
+    tiles = [
+        TileCost(load_s=1.0, exec_s=6.0, mem_bytes=10),
+        TileCost(load_s=1.0, exec_s=1.0, mem_bytes=10),
+        TileCost(load_s=4.0, exec_s=1.0, mem_bytes=10),
+    ]
+    p = plan_tiles(tiles, capacity=25)
+    q = ExecutionPlan.from_json_dict(p.to_json_dict())
+    assert q.windows == p.windows
+    assert q.baseline_windows == p.baseline_windows
+    assert q.capacity == p.capacity and q.tiles == p.tiles
+    assert q.total_stall == p.total_stall          # bit-identical floats
+    np.testing.assert_array_equal(q.timeline.exec_end, p.timeline.exec_end)
+    np.testing.assert_array_equal(q.baseline.load_start, p.baseline.load_start)
+
+
+def test_plan_cache_persists_across_instances(tmp_path):
+    from repro.plan.cache import PlanCache
+
+    tiles = [TileCost(1.0, 2.0, 10), TileCost(0.5, 1.5, 12)]
+    a = PlanCache(persist_dir=tmp_path)
+    p1 = a.get_or_plan(tiles, 50)
+    assert a.stats()["disk_hits"] == 0
+    # a fresh cache (new process in real life) loads from disk, no replan
+    b = PlanCache(persist_dir=tmp_path)
+    p2 = b.get_or_plan(tiles, 50)
+    assert b.stats() == {
+        "entries": 1, "hits": 0, "misses": 1, "disk_hits": 1,
+        "disk_errors": 0,
+    }
+    assert p2.windows == p1.windows
+    assert p2.total_stall == p1.total_stall
+    np.testing.assert_array_equal(
+        p2.timeline.exec_end, p1.timeline.exec_end
+    )
+    # second lookup in the same cache hits memory, not disk
+    b.get_or_plan(tiles, 50)
+    assert b.stats()["hits"] == 1 and b.stats()["disk_hits"] == 1
+
+
+def test_plan_cache_ignores_corrupt_spill(tmp_path):
+    from repro.plan.cache import PlanCache, plan_key
+
+    tiles = [TileCost(1.0, 2.0, 10)]
+    a = PlanCache(persist_dir=tmp_path)
+    p1 = a.get_or_plan(tiles, 50)
+    (tmp_path / f"{plan_key(tiles, 50)}.json").write_text("{not json")
+    b = PlanCache(persist_dir=tmp_path)
+    p2 = b.get_or_plan(tiles, 50)                  # replans, no crash
+    assert b.stats()["disk_errors"] >= 1
+    assert p2.windows == p1.windows
+
+
+def test_plan_cache_without_persist_dir_writes_nothing(tmp_path, monkeypatch):
+    from repro.plan.cache import PlanCache
+
+    monkeypatch.chdir(tmp_path)
+    cache = PlanCache()                            # no persist tier
+    cache.get_or_plan([TileCost(1.0, 1.0, 5)], 50)
+    assert list(tmp_path.iterdir()) == []
+
+
+def test_default_persist_dir_resolution(tmp_path, monkeypatch):
+    """The shared cache spills at the repo root (tracked markers, so
+    fresh clones/CI qualify before experiments/ exists), not elsewhere,
+    and the env var overrides both ways."""
+    from repro.plan.cache import _default_persist_dir
+
+    monkeypatch.delenv("REPRO_PLAN_CACHE_DIR", raising=False)
+    monkeypatch.chdir(tmp_path)
+    assert _default_persist_dir() is None          # not a repo root
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    (tmp_path / "ROADMAP.md").write_text("x")
+    # absolute: spills stay at the detected root even if cwd changes later
+    assert _default_persist_dir() == tmp_path / "experiments" / "plans"
+    monkeypatch.setenv("REPRO_PLAN_CACHE_DIR", "0")
+    assert _default_persist_dir() is None
+    monkeypatch.setenv("REPRO_PLAN_CACHE_DIR", str(tmp_path / "p"))
+    assert _default_persist_dir() == tmp_path / "p"

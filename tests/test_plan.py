@@ -275,7 +275,9 @@ def test_plan_cache_hits_identical_workloads():
     p1 = cache.get_or_plan(tiles, 50)
     p2 = cache.get_or_plan(list(tiles), 50)     # equal content, new list
     assert p1 is p2
-    assert cache.stats() == {"entries": 1, "hits": 1, "misses": 1}
+    assert cache.stats() == {
+        "entries": 1, "hits": 1, "misses": 1, "disk_hits": 0, "disk_errors": 0,
+    }
     # different capacity or tile costs miss
     cache.get_or_plan(tiles, 51)
     cache.get_or_plan(tiles[:-1], 50)
