@@ -359,23 +359,57 @@ def bench_streaming_lm():
 
 def bench_plan_suite(fast: bool):
     """repro.plan perf trajectory: adaptive-phase wall time, stall
-    reduction, and incremental-vs-reference speedup for ResNet-18/50 and
-    one LM config; multi-PU partitioning and plan-cache behaviour.
-    Emits BENCH_plan.json at the repo root so future PRs can diff."""
+    reduction, incremental-vs-reference speedup, schedule-search gains
+    (beam/anneal vs the paper heuristic), load-bound early exit, multi-PU
+    partitioning and plan-cache behaviour.  Emits BENCH_plan.json at the
+    repo root so future PRs can diff."""
     import time as _time
 
     from repro.configs import get_config
     from repro.core.pu import PU_1X, PU_2X, host_offload_config
     from repro.core import scheduler as sched
     from repro.core import simulator as sim
-    from repro.plan import PlanCache, plan
+    from repro.plan import PlanCache, SearchConfig, plan
     from repro.runtime.serving import model_gemms
 
     records = {}
 
+    # --fast trims the anneal ladder: same record shape, quick signal
+    # (the CI gate only runs against full-mode output)
+    anneal_steps = 300 if fast else 1500
+
+    def search_record(tiles, cap, heuristic):
+        """Beam + anneal vs the heuristic on one workload."""
+        out = {
+            "heuristic_stall_reduction": heuristic.stall_reduction,
+            "heuristic_wall_s": heuristic.plan_wall_s,
+        }
+        for strat, cfg in (
+            ("beam", SearchConfig(strategy="beam")),
+            ("anneal", SearchConfig(
+                strategy="anneal", seed=0, anneal_steps=anneal_steps)),
+        ):
+            t0 = _time.perf_counter()
+            sp = plan(tiles, cap, search=cfg)
+            out[strat] = {
+                "stall_reduction": sp.stall_reduction,
+                "wall_s": _time.perf_counter() - t0,
+                "relocations": len(sp.relocations()),
+                "gain_vs_heuristic": (
+                    sp.stall_reduction / heuristic.stall_reduction
+                    if heuristic.stall_reduction > 0
+                    else float("inf")
+                ),
+                "search": sp.search,
+            }
+        out["stall_reduction"] = out["anneal"]["stall_reduction"]
+        out["search_gain"] = out["anneal"]["gain_vs_heuristic"]
+        return out
+
     def run():
         records.clear()
         # ResNet workloads under memory pressure (adaptive phase active)
+        r50_tiles = None
         for variant in (18, 50):
             layers = sim.resnet_gemm_layers(variant)
             tiles = sim.model_tiles(PU_2X, layers)
@@ -392,19 +426,47 @@ def bench_plan_suite(fast: bool):
                 "stall_reduction": new.stall_reduction,
                 "relocations": len(new.relocations()),
             }
-            if not fast and variant == 18:
-                # reference comparison on the smaller net (r50 ~20s)
+            if not fast:
+                # bit-identity vs the reference planner: full-scan on the
+                # smaller net, bounded-scan on ResNet-50 (the full-scan
+                # reference costs ~20 s there; the bound exercises the
+                # same code paths)
+                scan = None if variant == 18 else 6
                 t0 = _time.perf_counter()
-                ref = sched.reference_two_phase(tiles, cap)
+                ref = sched.reference_two_phase(
+                    tiles, cap, max_window_scan=scan
+                )
                 rec["reference_wall_s"] = _time.perf_counter() - t0
-                rec["speedup"] = rec["reference_wall_s"] / t_new
+                if scan is None:
+                    rec["speedup"] = rec["reference_wall_s"] / t_new
+                    got = new
+                else:
+                    rec["reference_window_scan"] = scan
+                    t0 = _time.perf_counter()
+                    got = plan(tiles, cap, max_window_scan=scan)
+                    rec["speedup"] = rec["reference_wall_s"] / (
+                        _time.perf_counter() - t0
+                    )
                 rec["bit_identical"] = (
-                    [t.window for t in ref.adaptive.tiles] == list(new.windows)
-                    and ref.adaptive.total_stall == new.total_stall
+                    [t.window for t in ref.adaptive.tiles] == list(got.windows)
+                    and ref.adaptive.total_stall == got.total_stall
                 )
             records[f"resnet{variant}"] = rec
+            if variant == 50:
+                r50_tiles = tiles
+                records["search_resnet50"] = search_record(tiles, cap, new)
 
-        # one LM config: host->HBM streaming plan of a decode round
+        # second search workload: ResNet-50 under tighter memory, where
+        # annealing finds relocations the one-shot heuristic cannot
+        cap_tight = int(PU_2X.fast_mem_bytes * 0.2)
+        heur_tight = plan(r50_tiles, cap_tight)
+        rec = search_record(r50_tiles, cap_tight, heur_tight)
+        rec["capacity_frac"] = 0.2
+        records["search_resnet50_tight"] = rec
+
+        # one LM config: host->HBM streaming plan of a decode round --
+        # load-bound by design, so the adaptive phase must detect it and
+        # exit without burning wall time on a scan that can't help
         cfg = get_config("olmo-1b")
         gemms = model_gemms(cfg, batch_tokens=16)
         pu = host_offload_config()
@@ -419,6 +481,7 @@ def bench_plan_suite(fast: bool):
             "baseline_stall_s": lm_plan.baseline_stall,
             "adaptive_stall_s": lm_plan.total_stall,
             "stall_reduction": lm_plan.stall_reduction,
+            "skipped_load_bound": lm_plan.skipped_load_bound,
         }
 
         # multi-PU partitioning: K=2 pipeline vs the best single PU
@@ -457,12 +520,16 @@ def bench_plan_suite(fast: bool):
     run()
     us = (_time.perf_counter() - t0) * 1e6
     r18 = records["resnet18"]
+    r50 = records["resnet50"]
     part = records["partition_resnet50_k2"]
+    s50 = records["search_resnet50"]
     derived = (
-        f"r18_adaptive_s={r18['adaptive_wall_s']:.3f};"
+        f"r50_adaptive_s={r50['adaptive_wall_s']:.3f};"
         f"r18_stall_red={r18['stall_reduction']:.3f};"
         + (f"r18_speedup={r18['speedup']:.1f}x;" if "speedup" in r18 else "")
-        + f"k2_gain={part['pipeline_gain']:.2f}x;"
+        + f"search_gain={s50['search_gain']:.2f}x;"
+        f"olmo_skipped={records['olmo_1b_decode']['skipped_load_bound']};"
+        f"k2_gain={part['pipeline_gain']:.2f}x;"
         f"cache_hits={records['plan_cache']['hits_gained']}"
     )
     emit("plan", us, derived, records)
@@ -474,12 +541,16 @@ def bench_stream_suite(fast: bool):
     execute ResNet-50 partitioned plans for K in {1, 2} through
     runtime.pipeline_exec and record measured throughput, the
     measured-vs-predicted bubble fraction, and the K=2 gain over the
-    best single-PU executor.  Emits BENCH_stream.json at the repo root;
-    CI gates on gain >= 1.2x and bubble within 2x of prediction."""
+    best single-PU executor; then auto-tune microbatch depth against a
+    10% target bubble from the executed measurement and compare with the
+    fixed M=8 baseline.  Emits BENCH_stream.json at the repo root; CI
+    gates on gain >= 1.2x, bubble within 2x of prediction, and the
+    auto-tuner hitting its band at no throughput cost."""
     import time as _time
 
     from repro.core.pu import PU_1X, PU_2X
     from repro.core import simulator as sim
+    from repro.runtime.autotune import AutotuneConfig, tune_pipeline
     from repro.runtime.pipeline_exec import execute_partitioned_plan
 
     layers = sim.resnet_gemm_layers(50)
@@ -527,6 +598,24 @@ def bench_stream_suite(fast: bool):
         records["k2_bubble_vs_predicted"] = (
             r2["bubble_measured"] / max(r2["bubble_predicted"], 1e-12)
         )
+        # auto-tuned microbatch depth on the K=2 partition: the tuner
+        # must land the executed bubble within 10% of the 0.10 target
+        # and lose no throughput against the fixed M=8 baseline
+        pplan = sim.simulate_partitioned([PU_1X, PU_2X], layers)
+        tuned = tune_pipeline(pplan, AutotuneConfig(target_bubble=0.10))
+        records["autotune_k2"] = {
+            "target_bubble": tuned.target_bubble,
+            "tuned_m": tuned.n_microbatches,
+            "analytic_m": tuned.analytic_m,
+            "tuned_queue_depth": tuned.queue_depth,
+            "bubble_measured": tuned.bubble_measured,
+            "within_tolerance": tuned.within_tolerance,
+            "measured_fps": tuned.measured_fps,
+            "fixed_m8_fps": r2["measured_fps"],
+            "fps_vs_fixed_m8": tuned.measured_fps / r2["measured_fps"],
+            "trials": tuned.trials,
+            "depth_trials": tuned.depth_trials,
+        }
         return records
 
     # no timed(): its warmup pass would run the three pipelines twice
@@ -534,11 +623,13 @@ def bench_stream_suite(fast: bool):
     run()
     us = (_time.perf_counter() - t0) * 1e6
     r2 = records["k2"]
+    at = records["autotune_k2"]
     derived = (
         f"M={M};k2_measured_fps={r2['measured_fps']:.1f};"
         f"k2_gain={records['k2_gain_measured']:.2f}x;"
         f"bubble={r2['bubble_measured']:.3f}"
         f"(pred {r2['bubble_predicted']:.3f});"
+        f"autoM={at['tuned_m']}@bubble={at['bubble_measured']:.3f};"
         f"wall_s={r2['wall_s']:.2f}"
     )
     emit("stream", us, derived, records)

@@ -258,6 +258,7 @@ def adaptive_schedule(
     baseline: Optional[Schedule] = None,
     exhaustive: bool = False,
     max_window_scan: Optional[int] = None,
+    search=None,
 ) -> Schedule:
     """Phase 2: relocate stalled loads into earlier execution windows.
 
@@ -295,6 +296,7 @@ def adaptive_schedule(
     result = _plan.plan(
         tiles, capacity, preload_first=preload_first,
         exhaustive=exhaustive, max_window_scan=max_window_scan,
+        search=search,
     )
     return result.to_schedule("adaptive")
 
@@ -389,17 +391,22 @@ def two_phase(
     preload_first: bool = True,
     exhaustive: bool = False,
     max_window_scan: Optional[int] = None,
+    search=None,
 ) -> TwoPhaseResult:
     """Run both phases and return both schedules (paper Fig. 4).
 
-    Thin wrapper over ``repro.plan`` (single planning path for the repo);
-    see :func:`reference_two_phase` for the original implementation.
+    Thin wrapper over ``repro.plan`` (single planning path for the
+    repo); ``search`` (a ``repro.plan.SearchConfig``) upgrades the
+    adaptive phase to beam/annealing search over multi-tile
+    reassignments.  See :func:`reference_two_phase` for the original
+    implementation.
     """
     from repro import plan as _plan
 
     result = _plan.plan(
         tiles, capacity, preload_first=preload_first,
         exhaustive=exhaustive, max_window_scan=max_window_scan,
+        search=search,
     )
     return result.to_two_phase()
 

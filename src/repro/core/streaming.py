@@ -91,13 +91,17 @@ class StreamingPlan:
 
 
 def plan_streaming(
-    tiles: Sequence[WeightTile], pu: PUConfig
+    tiles: Sequence[WeightTile], pu: PUConfig, search=None
 ) -> StreamingPlan:
-    """Plan a tile sequence on ``pu`` via the shared (cached) planner."""
+    """Plan a tile sequence on ``pu`` via the shared (cached) planner.
+
+    ``search`` (a ``repro.plan.SearchConfig``) selects the schedule
+    search strategy; it is folded into the plan-cache key.
+    """
     from repro.plan import plan_cached
 
     costs = [t.cost(pu) for t in tiles]
-    result = plan_cached(costs, pu.fast_mem_bytes)
+    result = plan_cached(costs, pu.fast_mem_bytes, search=search)
     return StreamingPlan(tiles=list(tiles), plan=result, pu=pu)
 
 

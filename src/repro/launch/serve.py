@@ -9,7 +9,12 @@ scheduler and prints the plan summary (stall reduction, utilization);
 profiles (repro.plan.partition) and, after the decode loop drains,
 *executes* the partition through the stage-parallel streaming runtime
 (runtime.pipeline_exec) -- the printed stats carry both the analytic
-pipeline numbers and the measured (executed) throughput and bubble;
+pipeline numbers and the measured (executed) throughput and bubble.
+The executed microbatch depth (and handoff queue depth) is auto-tuned
+against ``--target-bubble`` from the measured bubble by default; pass
+an explicit ``--microbatches M`` to pin it.  ``--plan-search
+beam|anneal`` upgrades the streaming/partition planners' adaptive
+phase to schedule search (deterministic via ``--plan-search-seed``).
 ``--aimc`` enables the SS VI noise-injection emulation, refreshing
 weights with fresh PCM-style noise every round.
 """
@@ -26,6 +31,7 @@ from repro.configs import ARCH_IDS, get_config, smoke_variant
 from repro.core.aimc import AIMCNoiseModel
 from repro.core.pu import host_offload_config, tpu_v5e_config
 from repro.models import api as model_api
+from repro.plan import SearchConfig
 from repro.runtime.serving import ServeConfig, ServingEngine
 
 
@@ -44,9 +50,22 @@ def main() -> int:
                     help="partition the model across K PU profiles "
                          "(alternating host-offload / v5e); K=1 falls "
                          "back to the single-PU streaming path")
-    ap.add_argument("--microbatches", type=int, default=4, metavar="M",
-                    help="microbatches injected into the executed "
-                         "stage pipeline with --multi-pu")
+    ap.add_argument("--microbatches", type=int, default=0, metavar="M",
+                    help="microbatch depth for the executed stage "
+                         "pipeline with --multi-pu; 0 (default) "
+                         "auto-tunes M and the handoff queue depth "
+                         "against --target-bubble using the executed "
+                         "bubble measurement")
+    ap.add_argument("--target-bubble", type=float, default=0.10,
+                    help="target fill/drain bubble fraction for the "
+                         "microbatch auto-tuner (default 0.10)")
+    ap.add_argument("--plan-search", default="heuristic",
+                    choices=["heuristic", "beam", "anneal"],
+                    help="schedule-search strategy for the streaming/"
+                         "partition planners (beam/anneal spend the "
+                         "vectorized planner's budget on stall search)")
+    ap.add_argument("--plan-search-seed", type=int, default=0,
+                    help="deterministic seed for --plan-search anneal")
     ap.add_argument("--aimc", action="store_true",
                     help="AIMC noise emulation (SS VI NIU)")
     ap.add_argument("--seed", type=int, default=0)
@@ -75,6 +94,14 @@ def main() -> int:
             else None
         ),
         aimc=AIMCNoiseModel() if args.aimc else None,
+        plan_search=(
+            SearchConfig(
+                strategy=args.plan_search, seed=args.plan_search_seed
+            )
+            if args.plan_search != "heuristic"
+            else None
+        ),
+        target_bubble=args.target_bubble,
     )
     engine = ServingEngine(cfg, params, serve_cfg)
 
@@ -88,7 +115,11 @@ def main() -> int:
         # --multi-pu decode executes the partition for real: the
         # stage-parallel runtime streams every stage's tiles in plan
         # issue order and measures pipeline throughput + fill bubble.
-        engine.execute_partition(n_microbatches=args.microbatches)
+        # M=0 auto-tunes depth (and handoff queue depth) against the
+        # requested bubble target from the executed measurement.
+        engine.execute_partition(
+            n_microbatches=args.microbatches or None
+        )
     stats = engine.stats()
     print(json.dumps(stats, indent=1, default=float))
     return 0

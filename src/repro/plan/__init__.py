@@ -8,12 +8,13 @@ consume.  See DESIGN.md.
 
 - ``ir``:        ExecutionPlan / Timeline (tiles + windows + resolved
                  timeline + vectorized residency account)
-- ``engine``:    incremental event engine (suffix re-simulation,
-                 prefix-sum memory queries)
-- ``planner``:   two-phase planner, bit-identical to the reference
+- ``engine``:    event-indexed engine (critical-path trial rejection,
+                 suffix re-simulation, prefix-sum memory queries)
+- ``planner``:   two-phase planner (bit-identical to the reference)
+                 plus the SearchConfig beam/anneal search layer
 - ``partition``: multi-PU pipeline partitioning (contiguous layer
                  ranges balanced on exec time, per-PU scheduling)
-- ``cache``:     content-hashed plan cache
+- ``cache``:     content-hashed plan cache (search-strategy aware)
 """
 from repro.plan.cache import PLAN_CACHE, PlanCache, plan_cached, plan_key
 from repro.plan.ir import ExecutionPlan, Timeline, infeasible_plan
@@ -24,13 +25,14 @@ from repro.plan.partition import (
     partition_gemms,
     partition_layers,
 )
-from repro.plan.planner import plan
+from repro.plan.planner import SearchConfig, plan
 
 __all__ = [
     "ExecutionPlan",
     "Timeline",
     "infeasible_plan",
     "plan",
+    "SearchConfig",
     "plan_cached",
     "plan_key",
     "PlanCache",

@@ -29,7 +29,7 @@ from typing import Optional, Sequence, Union
 
 from repro.core.pu import TileCost
 from repro.plan.ir import ExecutionPlan
-from repro.plan.planner import plan as _plan
+from repro.plan.planner import SearchConfig, plan as _plan
 
 
 def _planner_fingerprint() -> bytes:
@@ -61,8 +61,15 @@ def plan_key(
     adaptive: bool = True,
     exhaustive: bool = False,
     max_window_scan: Optional[int] = None,
+    search: Optional[SearchConfig] = None,
 ) -> str:
-    """Content hash of everything the planner's output depends on."""
+    """Content hash of everything the planner's output depends on.
+
+    The search descriptor (strategy, parameters, *and seed*) is part of
+    the key: a heuristic plan, a beam plan, and two differently-seeded
+    annealed plans of the same workload are distinct artifacts and must
+    never alias in memory or on disk.
+    """
     h = hashlib.sha256(_PLANNER_FP)
     h.update(
         struct.pack(
@@ -74,6 +81,8 @@ def plan_key(
             -1 if max_window_scan is None else max_window_scan,
         )
     )
+    if search is not None and search.strategy != "heuristic":
+        h.update(search.key_bytes())
     for t in tiles:
         h.update(struct.pack("<ddq", t.load_s, t.exec_s, t.mem_bytes))
     return h.hexdigest()

@@ -94,6 +94,12 @@ class ExecutionPlan:
     baseline: Timeline
     timeline: Timeline                     # final (adaptive) timeline
     plan_wall_s: float = 0.0               # planner wall time (diagnostics)
+    # descriptor of the schedule search that produced `windows`
+    # ("heuristic", or a SearchConfig descriptor like "beam(w=4,...)")
+    search: str = "heuristic"
+    # the adaptive phase detected a load-bound workload (no execution
+    # window can conceal any stalled load) and exited without trials
+    skipped_load_bound: bool = False
 
     # ---- summary statistics -------------------------------------------
 
@@ -235,21 +241,48 @@ class ExecutionPlan:
             "baseline": tl(self.baseline),
             "timeline": tl(self.timeline),
             "plan_wall_s": self.plan_wall_s,
+            "search": self.search,
+            "skipped_load_bound": self.skipped_load_bound,
         }
 
     @staticmethod
     def from_json_dict(d: dict) -> "ExecutionPlan":
+        """Parse a persisted plan, validating its structure.
+
+        A spill file can be corrupt in ways ``json.loads`` cannot see --
+        truncated arrays, mismatched tile counts, windows out of range.
+        Serving such a plan would silently execute a wrong schedule, so
+        shape inconsistencies raise ``ValueError`` (the cache treats
+        that like any other corrupt spill: recompute and rewrite).
+        """
         if d.get("version") != 1:
             raise ValueError(f"unknown plan version {d.get('version')!r}")
+        n = len(d["tiles"])
 
         def tl(x: dict) -> Timeline:
-            return Timeline(
+            t = Timeline(
                 load_start=np.asarray(x["load_start"], np.float64),
                 load_end=np.asarray(x["load_end"], np.float64),
                 exec_start=np.asarray(x["exec_start"], np.float64),
                 exec_end=np.asarray(x["exec_end"], np.float64),
                 feasible=bool(x["feasible"]),
             )
+            lens = {
+                len(t.load_start), len(t.load_end),
+                len(t.exec_start), len(t.exec_end),
+            }
+            if t.feasible and lens != ({n} if n else {0}):
+                raise ValueError(
+                    f"timeline arrays of length {sorted(lens)} do not "
+                    f"match {n} tiles"
+                )
+            return t
+
+        def wins(key: str) -> Tuple[int, ...]:
+            w = tuple(int(v) for v in d[key])
+            if len(w) != n or any(not (-1 <= v < i) for i, v in enumerate(w)):
+                raise ValueError(f"invalid {key} for {n} tiles")
+            return w
 
         return ExecutionPlan(
             tiles=tuple(
@@ -258,11 +291,13 @@ class ExecutionPlan:
             ),
             capacity=int(d["capacity"]),
             preload_first=bool(d["preload_first"]),
-            baseline_windows=tuple(int(w) for w in d["baseline_windows"]),
-            windows=tuple(int(w) for w in d["windows"]),
+            baseline_windows=wins("baseline_windows"),
+            windows=wins("windows"),
             baseline=tl(d["baseline"]),
             timeline=tl(d["timeline"]),
             plan_wall_s=float(d.get("plan_wall_s", 0.0)),
+            search=str(d.get("search", "heuristic")),
+            skipped_load_bound=bool(d.get("skipped_load_bound", False)),
         )
 
     def summary(self) -> dict:
@@ -279,6 +314,8 @@ class ExecutionPlan:
             "makespan_s": self.makespan,
             "relocations": len(self.relocations()),
             "plan_wall_s": self.plan_wall_s,
+            "search": self.search,
+            "skipped_load_bound": self.skipped_load_bound,
         }
 
 

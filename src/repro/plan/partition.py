@@ -208,6 +208,7 @@ def partition_layers(
     name_of=None,
     act_bytes_of=None,
     use_cache: bool = True,
+    search=None,
 ) -> PartitionedPlan:
     """Partition an arbitrary layer sequence across ``pus``.
 
@@ -217,7 +218,9 @@ def partition_layers(
     ``name_of(layer) -> str`` names the layer's tiles (executor handoff
     metadata); ``act_bytes_of(layer) -> int`` sizes the layer's *input*
     activations, charged as the handoff into the stage that starts with
-    that layer.
+    that layer.  ``search`` (a ``repro.plan.SearchConfig``) selects the
+    per-stage schedule-search strategy; it is part of each stage plan's
+    cache key.
 
     Degenerate shapes fall back to the single-PU path rather than
     producing empty stages: K > L cannot fill K non-empty contiguous
@@ -255,9 +258,9 @@ def partition_layers(
             )
             tiles.extend(layer_tiles)
         if use_cache:
-            stage_plan = plan_cached(tiles, pu.fast_mem_bytes)
+            stage_plan = plan_cached(tiles, pu.fast_mem_bytes, search=search)
         else:
-            stage_plan = _plan(tiles, pu.fast_mem_bytes)
+            stage_plan = _plan(tiles, pu.fast_mem_bytes, search=search)
         handoff_bytes = (
             int(act_bytes_of(layers[start]))
             if (s > 0 and act_bytes_of is not None)
@@ -285,6 +288,7 @@ def partition_gemms(
     *,
     layer_latency_s=None,
     use_cache: bool = True,
+    search=None,
 ) -> PartitionedPlan:
     """Partition a (name, N, M, P) GEMM sequence across ``pus``.
 
@@ -304,4 +308,5 @@ def partition_gemms(
         # inbound activations of (name, N, M, P): the M x P int8 operand
         act_bytes_of=lambda g: g[2] * g[3],
         use_cache=use_cache,
+        search=search,
     )

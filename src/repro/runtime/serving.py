@@ -42,7 +42,7 @@ from repro.core.aimc import AIMCNoiseModel, NoiseInjectionUnit
 from repro.core.pu import PUConfig, host_offload_config
 from repro.core.streaming import StreamingPlan, WeightTile, plan_streaming
 from repro.models import api as model_api
-from repro.plan import PartitionedPlan, partition_gemms
+from repro.plan import PartitionedPlan, SearchConfig, partition_gemms
 
 
 @dataclasses.dataclass
@@ -60,6 +60,13 @@ class ServeConfig:
     # two-phase schedule per PU -- repro.plan.partition); overrides the
     # single-PU plan when set
     stream_pus: Optional[List[PUConfig]] = None
+    # schedule-search strategy for the streaming/partition planners
+    # (None/heuristic = the paper's one-shot heuristic; beam/anneal run
+    # the richer search funded by the event-indexed engine)
+    plan_search: Optional[SearchConfig] = None
+    # target fill/drain bubble fraction for the auto-tuned microbatch
+    # depth when execute_partition() is called without an explicit M
+    target_bubble: float = 0.10
     # AIMC emulation
     aimc: Optional[AIMCNoiseModel] = None
     aimc_refresh_every: int = 1    # refresh noise every N engine rounds
@@ -129,15 +136,20 @@ class ServingEngine:
         self.stage_meshes = None
         self.stage_meshes_shared = False
         self.last_pipeline_report = None
+        self.last_autotune = None
         if serve_cfg.stream_pus and len(serve_cfg.stream_pus) == 1:
             # K=1 degenerates to the single-PU path: one "partition
             # stage" would only re-wrap the plain streaming plan.
             self.streaming_plan = plan_model_streaming(
-                cfg, serve_cfg.stream_pus[0], batch_tokens=serve_cfg.max_batch
+                cfg, serve_cfg.stream_pus[0],
+                batch_tokens=serve_cfg.max_batch,
+                search=serve_cfg.plan_search,
             )
         elif serve_cfg.stream_pus:
             self.partitioned_plan = plan_partitioned_streaming(
-                cfg, serve_cfg.stream_pus, batch_tokens=serve_cfg.max_batch
+                cfg, serve_cfg.stream_pus,
+                batch_tokens=serve_cfg.max_batch,
+                search=serve_cfg.plan_search,
             )
             if mesh is not None:
                 from repro.launch.mesh import stage_submeshes
@@ -147,7 +159,9 @@ class ServingEngine:
                 )
         elif serve_cfg.stream_pu is not None:
             self.streaming_plan = plan_model_streaming(
-                cfg, serve_cfg.stream_pu, batch_tokens=serve_cfg.max_batch
+                cfg, serve_cfg.stream_pu,
+                batch_tokens=serve_cfg.max_batch,
+                search=serve_cfg.plan_search,
             )
         self.niu: Optional[NoiseInjectionUnit] = None
         if serve_cfg.aimc is not None and serve_cfg.aimc.enabled():
@@ -273,10 +287,16 @@ class ServingEngine:
         return int(self._rng.choice(len(p), p=p))
 
     # -- executed partition (stage-parallel streaming runtime) ---------------
-    def execute_partition(self, n_microbatches: int = 4):
+    def execute_partition(self, n_microbatches: Optional[int] = None):
         """Run the partitioned plan through the real stage-parallel
         executor (``runtime.pipeline_exec``): K stage threads, per-stage
         prefetch workers honoring issue order, double-buffered handoffs.
+
+        ``n_microbatches=None`` (the default) auto-tunes the microbatch
+        depth and handoff queue depth against
+        ``ServeConfig.target_bubble`` using the *executed* bubble
+        measurement (``runtime.autotune``); an explicit integer pins M
+        (the legacy fixed-depth behaviour).
 
         Validates the partition as a *runnable* artifact -- measured
         pipeline throughput and fill bubble land in :meth:`stats`
@@ -289,11 +309,22 @@ class ServingEngine:
         if self.partitioned_plan is None:
             raise ValueError("engine has no partitioned plan "
                              "(ServeConfig.stream_pus not set or K=1)")
+        if n_microbatches is None:
+            from repro.runtime.autotune import AutotuneConfig, tune_pipeline
+
+            result = tune_pipeline(
+                self.partitioned_plan,
+                AutotuneConfig(target_bubble=self.serve_cfg.target_bubble),
+            )
+            self.last_autotune = result
+            self.last_pipeline_report = result.report
+            return result.report
         from repro.runtime.pipeline_exec import execute_partitioned_plan
 
         report = execute_partitioned_plan(
             self.partitioned_plan, n_microbatches=n_microbatches
         )
+        self.last_autotune = None     # pinned M supersedes any prior tune
         self.last_pipeline_report = report
         return report
 
@@ -347,6 +378,22 @@ class ServingEngine:
                         "partition_bubble_measured": r.bubble_measured,
                         "partition_bubble_predicted": r.bubble_predicted,
                         "partition_executed_wall_s": r.wall_s,
+                        "partition_microbatches": float(r.n_microbatches),
+                    }
+                )
+            if self.last_autotune is not None:
+                a = self.last_autotune
+                out.update(
+                    {
+                        "partition_autotuned_m": float(a.n_microbatches),
+                        "partition_autotuned_queue_depth": float(
+                            a.queue_depth
+                        ),
+                        "partition_autotune_target_bubble": a.target_bubble,
+                        "partition_autotune_within_tolerance": float(
+                            a.within_tolerance
+                        ),
+                        "partition_autotune_trials": float(len(a.trials)),
                     }
                 )
             if self.stage_meshes is not None:
@@ -428,6 +475,7 @@ def plan_model_streaming(
     cfg: ModelConfig,
     pu: Optional[PUConfig] = None,
     batch_tokens: int = 8,
+    search: Optional[SearchConfig] = None,
 ) -> StreamingPlan:
     """Two-phase streaming plan for one decode round of ``cfg``.
 
@@ -439,19 +487,23 @@ def plan_model_streaming(
         WeightTile(name=name, layer_index=i, n=n, m=m, p=p)
         for i, (name, n, m, p) in enumerate(model_gemms(cfg, batch_tokens))
     ]
-    return plan_streaming(tiles, pu)
+    return plan_streaming(tiles, pu, search=search)
 
 
 def plan_partitioned_streaming(
     cfg: ModelConfig,
     pus: Sequence[PUConfig],
     batch_tokens: int = 8,
+    search: Optional[SearchConfig] = None,
 ) -> PartitionedPlan:
     """Split one decode round's GEMM sequence across several PU profiles.
 
     Contiguous GEMM ranges are balanced on each profile's exec-time model
     and each stage gets its own two-phase schedule (capacity + load
     channel per PU) -- the served model streams across the whole fleet
-    instead of replicating frames.
+    instead of replicating frames.  ``search`` selects each stage's
+    schedule-search strategy.
     """
-    return partition_gemms(model_gemms(cfg, batch_tokens), list(pus))
+    return partition_gemms(
+        model_gemms(cfg, batch_tokens), list(pus), search=search
+    )

@@ -18,6 +18,7 @@ from repro.core import simulator as sim
 from repro.plan import (
     PlanCache,
     PartitionedPlan,
+    SearchConfig,
     balance_layer_ranges,
     partition_gemms,
     plan,
@@ -107,6 +108,38 @@ def test_resnet50_adaptive_bit_identical_and_faster():
     got = plan(tiles, cap, max_window_scan=6)
     assert list(got.windows) == [t.window for t in ref.adaptive.tiles]
     assert got.total_stall == ref.adaptive.total_stall
+
+
+@st.composite
+def window_assignments(draw):
+    tiles = draw(tile_lists())
+    windows = [draw(st.integers(-1, j - 1)) for j in range(len(tiles))]
+    return tiles, windows
+
+
+@settings(max_examples=40, deadline=None)
+@given(tw=window_assignments(), cap=st.integers(30, 150))
+def test_engine_simulate_matches_reference_on_random_windows(tw, cap):
+    """The vectorized engine reproduces the reference event simulation
+    bit-for-bit on arbitrary (not just planner-generated) assignments --
+    including infeasible/deadlocking ones."""
+    tiles, windows = tw
+    ref = sched.simulate(tiles, cap, windows)
+    eng = PlanEngine(
+        [t.load_s for t in tiles],
+        [t.exec_s for t in tiles],
+        [t.mem_bytes for t in tiles],
+        cap,
+    )
+    got = eng.simulate(windows)
+    assert ref.feasible == got.feasible
+    if ref.feasible:
+        for i, t in enumerate(ref.tiles):
+            assert t.load_start == got.load_start[i]
+            assert t.load_end == got.load_end[i]
+            assert t.exec_start == got.exec_start[i]
+            assert t.exec_end == got.exec_end[i]
+        assert ref.total_stall == got.total_stall
 
 
 # ------------------------------------------------------- edge cases -------
@@ -294,6 +327,86 @@ def test_plan_cache_key_sensitivity():
     assert plan_key(tiles, 50, max_window_scan=3) != k
 
 
+def test_plan_cache_key_search_strategy_and_seed():
+    """Heuristic / beam / differently-seeded annealed plans of the same
+    workload must never alias -- strategy, parameters and seed are all
+    part of the key (the explicit heuristic config is the default)."""
+    tiles = tiles_from([(1.0, 2.0, 10), (2.0, 1.0, 12)])
+    k = plan_key(tiles, 50)
+    assert plan_key(tiles, 50, search=SearchConfig()) == k
+    kb = plan_key(tiles, 50, search=SearchConfig(strategy="beam"))
+    ka0 = plan_key(tiles, 50, search=SearchConfig(strategy="anneal", seed=0))
+    ka1 = plan_key(tiles, 50, search=SearchConfig(strategy="anneal", seed=1))
+    assert len({k, kb, ka0, ka1}) == 4
+    assert plan_key(
+        tiles, 50, search=SearchConfig(strategy="beam", beam_width=8)
+    ) != kb
+    assert plan_key(
+        tiles, 50, search=SearchConfig(strategy="anneal", seed=0,
+                                       anneal_steps=99)
+    ) != ka0
+
+
+def test_plan_cache_search_plans_do_not_alias(tmp_path):
+    """End-to-end: one cache, one workload, three strategies -> three
+    distinct entries and three distinct spill files."""
+    tiles = sim.model_tiles(PU_2X, sim.resnet_gemm_layers(18))
+    cap = int(PU_2X.fast_mem_bytes * 0.25)
+    cache = PlanCache(persist_dir=tmp_path)
+    h = cache.get_or_plan(tiles, cap)
+    a = cache.get_or_plan(
+        tiles, cap, search=SearchConfig(strategy="anneal", seed=0,
+                                        anneal_steps=300)
+    )
+    b = cache.get_or_plan(
+        tiles, cap, search=SearchConfig(strategy="anneal", seed=1,
+                                        anneal_steps=300)
+    )
+    assert cache.stats()["misses"] == 3
+    assert h.search == "heuristic" and a.search != h.search
+    assert a.search != b.search
+    assert len(list(tmp_path.glob("*.json"))) == 3
+    # reloading an annealed plan from disk keeps its identity
+    fresh = PlanCache(persist_dir=tmp_path)
+    a2 = fresh.get_or_plan(
+        tiles, cap, search=SearchConfig(strategy="anneal", seed=0,
+                                        anneal_steps=300)
+    )
+    assert fresh.stats()["disk_hits"] == 1
+    assert a2.windows == a.windows and a2.search == a.search
+
+
+def test_plan_cache_rejects_structurally_corrupt_spill(tmp_path):
+    """A spill that parses as JSON but is internally inconsistent
+    (truncated timeline arrays) must be treated as corrupt: recomputed,
+    not served."""
+    import json as _json
+
+    from repro.plan.cache import PlanCache as _PC, plan_key as _pk
+
+    tiles = tiles_from([(1.0, 2.0, 10), (2.0, 1.0, 12), (1.5, 1.5, 8)])
+    a = _PC(persist_dir=tmp_path)
+    p1 = a.get_or_plan(tiles, 50)
+    path = tmp_path / f"{_pk(tiles, 50)}.json"
+    d = _json.loads(path.read_text())
+    d["timeline"]["exec_end"] = d["timeline"]["exec_end"][:-1]   # truncate
+    path.write_text(_json.dumps(d))
+    b = _PC(persist_dir=tmp_path)
+    p2 = b.get_or_plan(tiles, 50)                  # replans, no crash
+    assert b.stats()["disk_errors"] >= 1
+    assert b.stats()["disk_hits"] == 0
+    assert p2.windows == p1.windows
+    assert len(p2.timeline.exec_end) == len(tiles)
+    # out-of-range windows are rejected the same way
+    d = _json.loads(path.read_text())
+    d["windows"] = [5] * len(d["windows"])
+    path.write_text(_json.dumps(d))
+    c = _PC(persist_dir=tmp_path)
+    p3 = c.get_or_plan(tiles, 50)
+    assert c.stats()["disk_errors"] >= 1
+    assert p3.windows == p1.windows
+
+
 def test_plan_cache_lru_eviction():
     cache = PlanCache(max_entries=2)
     t1 = tiles_from([(1.0, 1.0, 1)])
@@ -317,6 +430,88 @@ def test_simulate_model_uses_shared_cache():
     before = PLAN_CACHE.stats()["hits"]
     sim.simulate_model(PU_2X, layers)   # identical workload: cache hit
     assert PLAN_CACHE.stats()["hits"] == before + 1
+
+
+# ----------------------------------------------------------- search -------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=tile_lists(),
+    cap=st.integers(40, 150),
+    strategy=st.sampled_from(["beam", "anneal"]),
+    seed=st.integers(0, 3),
+)
+def test_search_never_worse_than_heuristic_seed(tiles, cap, strategy, seed):
+    """Property: beam/anneal schedules never carry more stall than the
+    heuristic seed schedule they start from."""
+    heur = plan(tiles, cap)
+    cfg = SearchConfig(
+        strategy=strategy, seed=seed, anneal_steps=200, beam_rounds=4
+    )
+    searched = plan(tiles, cap, search=cfg)
+    assert searched.feasible == heur.feasible
+    if heur.feasible:
+        assert searched.total_stall <= heur.total_stall + 1e-12
+        assert searched.baseline_stall == heur.baseline_stall
+        assert searched.search == cfg.descriptor()
+
+
+def test_search_deterministic_by_seed():
+    tiles = sim.model_tiles(PU_2X, sim.resnet_gemm_layers(18))
+    cap = int(PU_2X.fast_mem_bytes * 0.25)
+    cfg = SearchConfig(strategy="anneal", seed=7, anneal_steps=300)
+    a = plan(tiles, cap, search=cfg)
+    b = plan(tiles, cap, search=cfg)
+    assert a.windows == b.windows
+    assert a.total_stall == b.total_stall
+
+
+def test_search_improves_resnet50_under_pressure():
+    """Acceptance: annealing beats the one-shot heuristic on the
+    memory-pressured ResNet-50 workload the plan bench records."""
+    tiles = sim.model_tiles(PU_2X, sim.resnet_gemm_layers(50))
+    cap = int(PU_2X.fast_mem_bytes * 0.2)
+    heur = plan(tiles, cap)
+    ann = plan(
+        tiles, cap,
+        search=SearchConfig(strategy="anneal", seed=0, anneal_steps=1500),
+    )
+    assert ann.stall_reduction >= 1.5 * heur.stall_reduction
+    # the searched schedule is still a valid residency-bounded plan
+    assert ann.peak_memory() <= cap
+
+
+def test_unknown_search_strategy_rejected():
+    with pytest.raises(ValueError):
+        SearchConfig(strategy="genetic")
+
+
+# ------------------------------------------------- load-bound early exit --
+
+
+def test_load_bound_workload_skips_adaptive_scan():
+    """Every load dwarfs every execution window: the adaptive phase must
+    detect it, try nothing, and stay bit-identical to the reference
+    (which scans and also finds no candidate)."""
+    tiles = tiles_from([(5.0, 0.5, 10)] * 12)
+    got = plan(tiles, capacity=1000)
+    ref = sched.reference_two_phase(tiles, capacity=1000)
+    assert got.skipped_load_bound
+    assert_same_schedule(ref.adaptive, got.to_two_phase().adaptive)
+    assert got.windows == got.baseline_windows
+    # exhaustive mode has candidates (partial concealment): no skip
+    ex = plan(tiles, capacity=1000, exhaustive=True)
+    assert not ex.skipped_load_bound
+
+
+def test_compute_bound_workload_not_skipped():
+    # tile 2 stalls (3 s load behind a 2 s window) but window 0 (8 s
+    # exec) can conceal it: candidates exist, so no load-bound exit
+    tiles = tiles_from([(0.5, 8.0, 10), (0.5, 2.0, 10), (3.0, 2.0, 10)])
+    p = plan(tiles, capacity=1000)
+    assert not p.skipped_load_bound
+    assert p.relocations()   # and the heuristic actually fixes it
 
 
 # --------------------------------------------------------- IR shape -------
