@@ -24,6 +24,11 @@ Gates:
   measured bubble within 2x of the analytic prediction, and the
   microbatch auto-tuner landing in its bubble band at no throughput
   cost vs the fixed M=8 baseline.
+- ``BENCH_serve.json``: the device-resident serving floor -- steady-state
+  decode tokens/s >= 1.5x the legacy host-loop engine per config, zero
+  jit retraces after warmup under mixed-length traffic, and greedy token
+  streams bit-identical to the host loop on the dense (bit-gated)
+  configs.
 
 Exit code 1 on any regression, with one line per violation.
 """
@@ -53,6 +58,11 @@ ADAPTIVE_WALL_CEILING_S = {
 SEARCH_GAIN_FLOOR = 1.5
 SEARCH_WALL_CEILING_S = 8.0
 SEARCH_WORKLOADS = ("search_resnet50", "search_resnet50_tight")
+
+# Device-resident serving engine: steady-state decode throughput floor
+# over the legacy host-loop engine (measured medians 1.8x-2.6x on the
+# dev container; the floor is the PR's acceptance criterion).
+SERVE_DECODE_SPEEDUP_FLOOR = 1.5
 
 
 def committed(name: str, ref: str) -> dict | None:
@@ -162,6 +172,40 @@ def check_stream(cand: dict, errors: list[str]) -> None:
             )
 
 
+def check_serve(cand: dict, errors: list[str]) -> None:
+    configs = cand.get("configs", {})
+    if not configs:
+        errors.append("serve: no per-config records in BENCH_serve.json")
+        return
+    for arch, rec in configs.items():
+        spd = rec.get("decode_speedup", 0.0)
+        if spd < SERVE_DECODE_SPEEDUP_FLOOR:
+            errors.append(
+                f"serve/{arch}: decode speedup {spd:.2f}x < "
+                f"{SERVE_DECODE_SPEEDUP_FLOOR}x floor vs the host-loop "
+                "engine"
+            )
+        if rec.get("speedup", 0.0) < SERVE_DECODE_SPEEDUP_FLOOR:
+            errors.append(
+                f"serve/{arch}: end-to-end speedup "
+                f"{rec.get('speedup', 0.0):.2f}x < "
+                f"{SERVE_DECODE_SPEEDUP_FLOOR}x floor"
+            )
+        retr = rec.get("retraces_after_warmup", -1)
+        if retr != 0:
+            errors.append(
+                f"serve/{arch}: {retr} jit retraces after warmup under "
+                "mixed-length traffic (ceiling is 0)"
+            )
+        if rec.get("bit_gated") and not rec.get("greedy_bit_identical"):
+            errors.append(
+                f"serve/{arch}: greedy device stream diverged from the "
+                "host-loop engine"
+            )
+    if "ttft_poisson" not in cand:
+        errors.append("serve: ttft_poisson record missing")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ref", default="HEAD",
@@ -169,6 +213,9 @@ def main() -> int:
     ap.add_argument("--require-stream", action="store_true",
                     help="fail when BENCH_stream.json is absent (CI runs "
                          "the stream bench immediately before this gate)")
+    ap.add_argument("--require-serve", action="store_true",
+                    help="fail when BENCH_serve.json is absent (CI runs "
+                         "the serve bench immediately before this gate)")
     args = ap.parse_args()
 
     errors: list[str] = []
@@ -188,6 +235,14 @@ def main() -> int:
     elif args.require_stream:
         errors.append(
             "BENCH_stream.json missing (run `benchmarks.run --only stream`)"
+        )
+
+    serve_path = ROOT / "BENCH_serve.json"
+    if serve_path.exists():
+        check_serve(json.loads(serve_path.read_text()), errors)
+    elif args.require_serve:
+        errors.append(
+            "BENCH_serve.json missing (run `benchmarks.run --only serve`)"
         )
 
     for e in errors:

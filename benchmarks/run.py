@@ -21,6 +21,12 @@ Beyond-paper (TPU adaptation):
                                          (BENCH_plan.json) and the executed
                                          stage pipeline vs its analytic
                                          model (BENCH_stream.json)
+  serve                               -> device-resident decode loop vs the
+                                         legacy host-loop engine: decode
+                                         tok/s, retraces under mixed-length
+                                         traffic, greedy bit-identity,
+                                         prefill latency per bucket, Poisson
+                                         TTFT percentiles (BENCH_serve.json)
   train_smoke / serve_smoke           -> end-to-end throughput (reduced configs)
   roofline_summary                    -> reads experiments/dryrun artifacts
 """
@@ -636,6 +642,200 @@ def bench_stream_suite(fast: bool):
     (ROOT / "BENCH_stream.json").write_text(json.dumps(records, indent=1))
 
 
+def bench_serve_suite(fast: bool):
+    """Device-resident decode loop vs the legacy host-loop engine
+    (DESIGN.md SS7): identical mixed-length traffic through both engines
+    per model config, recording decode throughput, the jit trace deltas
+    after warmup, greedy stream bit-identity, per-bucket prefill latency,
+    and TTFT percentiles under a Poisson arrival trace.  Emits
+    BENCH_serve.json at the repo root; CI gates on the >=1.5x speedup
+    floor, a zero-retrace ceiling after warmup, and bit-identity on the
+    dense configs (MoE capacity coupling legitimately perturbs logits
+    under admission regrouping, so mixtral's stream equality is recorded
+    but not gated)."""
+    import time as _time
+
+    import jax
+    from repro.configs import get_config, smoke_variant
+    from repro.models import api as model_api
+    from repro.runtime.serving import ServeConfig, ServingEngine
+
+    archs = ("olmo-1b", "mixtral-8x7b") if fast else (
+        "olmo-1b", "mixtral-8x7b", "gemma3-12b"
+    )
+    bit_gated = {"olmo-1b", "gemma3-12b"}
+    n_req = 8 if fast else 16
+    max_new = 12 if fast else 16
+    records = {"n_requests": n_req, "max_new_tokens": max_new, "configs": {}}
+
+    def mk_engine(cfg, params, host):
+        return ServingEngine(
+            cfg, params,
+            ServeConfig(
+                max_batch=4, max_len=96, max_new_tokens=max_new,
+                host_sampling=host,
+            ),
+        )
+
+    def traffic(cfg, seed=2):
+        rng = np.random.default_rng(seed)
+        return [
+            rng.integers(0, cfg.vocab, int(l)).astype(np.int32)
+            for l in rng.integers(6, 40, n_req)
+        ]
+
+    def run_one(eng, prompts):
+        eng.warmup()
+        traces0 = dict(eng.trace_counts)
+        t0 = _time.perf_counter()
+        for p in prompts:
+            eng.submit(p.copy())
+        done = eng.run_until_drained()
+        wall = _time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        streams = {r.uid: list(r.out_tokens) for r in done}
+        retraces = {
+            k: eng.trace_counts[k] - traces0[k] for k in traces0
+        }
+        return toks / wall, wall, streams, retraces
+
+    def decode_phase_rate(cfg, params, host):
+        """Steady-state decode rate with prefill out of the timed window:
+        admit a full batch, then time the pure decode drain.  Median over
+        trials (single-run walls are jittery at smoke scale)."""
+        trials = 3 if fast else 5
+        decode_new = 48 if fast else 64
+        rng = np.random.default_rng(9)
+        rates = []
+        for _ in range(trials):
+            eng = ServingEngine(
+                cfg, params,
+                ServeConfig(
+                    max_batch=4, max_len=decode_new + 40,
+                    max_new_tokens=decode_new, host_sampling=host,
+                ),
+            )
+            eng.warmup()
+            for _ in range(4):
+                eng.submit(
+                    rng.integers(0, cfg.vocab, 24).astype(np.int32)
+                )
+            if host:
+                while eng.pending:
+                    slot = next(
+                        i for i, s in enumerate(eng._slots) if s is None
+                    )
+                    eng._admit_host(slot, eng._queue.popleft())
+            else:
+                eng._admit_device()
+            # tokens already emitted at admission (host keeps them in
+            # req.out_tokens; the device engine holds them in out_buf and
+            # mirrors the count in _slot_emitted)
+            pre = sum(len(r.out_tokens) for r in eng.completed)
+            for i, r in enumerate(eng._slots):
+                if r is not None:
+                    pre += (
+                        len(r.out_tokens) if host
+                        else int(eng._slot_emitted[i])
+                    )
+            t0 = _time.perf_counter()
+            done = eng.run_until_drained()
+            wall = _time.perf_counter() - t0
+            toks = sum(len(r.out_tokens) for r in done) - pre
+            rates.append(toks / wall)
+        return float(np.median(rates))
+
+    def run():
+        records["configs"].clear()
+        for arch in archs:
+            cfg = smoke_variant(get_config(arch))
+            api = model_api.get_api(cfg)
+            params = api.init_params(cfg, jax.random.PRNGKey(0))
+            prompts = traffic(cfg)
+            host = mk_engine(cfg, params, host=True)
+            host_tps, host_wall, host_streams, _ = run_one(host, prompts)
+            dev = mk_engine(cfg, params, host=False)
+            dev_tps, dev_wall, dev_streams, retr = run_one(dev, prompts)
+            host_dec = decode_phase_rate(cfg, params, host=True)
+            dev_dec = decode_phase_rate(cfg, params, host=False)
+            rec = {
+                "family": cfg.family,
+                "host_tokens_per_s": host_tps,
+                "device_tokens_per_s": dev_tps,
+                "speedup": dev_tps / host_tps,
+                "host_decode_tokens_per_s": host_dec,
+                "device_decode_tokens_per_s": dev_dec,
+                "decode_speedup": dev_dec / host_dec,
+                "host_wall_s": host_wall,
+                "device_wall_s": dev_wall,
+                "retraces_after_warmup": sum(retr.values()),
+                "retraces_by_kind": retr,
+                "greedy_bit_identical": host_streams == dev_streams,
+                "bit_gated": arch in bit_gated,
+                "prefill_s_by_bucket": {
+                    str(b): float(np.mean(ts))
+                    for b, ts in sorted(dev.prefill_bucket_s.items())
+                },
+                "decode_traces_total": dev.trace_counts["decode"],
+                "prefill_traces_total": dev.trace_counts["prefill"],
+            }
+            records["configs"][arch] = rec
+
+        # TTFT under a Poisson arrival trace (device engine, olmo):
+        # requests arrive on the open-loop clock; the engine keeps fusing
+        # decode blocks between admissions
+        cfg = smoke_variant(get_config("olmo-1b"))
+        api = model_api.get_api(cfg)
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        eng = mk_engine(cfg, params, host=False)
+        eng.warmup()
+        rng = np.random.default_rng(5)
+        n_arr = 6 if fast else 12
+        gaps = rng.exponential(0.08, n_arr)
+        arrivals = np.cumsum(gaps)
+        prompts = traffic(cfg, seed=6)
+        t0 = _time.perf_counter()
+        i = 0
+        while i < n_arr or eng.pending or eng.active:
+            now = _time.perf_counter() - t0
+            while i < n_arr and arrivals[i] <= now:
+                eng.submit(prompts[i % len(prompts)].copy())
+                i += 1
+            if eng.pending or eng.active:
+                eng.step()
+            elif i < n_arr:
+                _time.sleep(min(0.005, arrivals[i] - now))
+        ttfts = sorted(
+            r.ttft_s for r in eng.completed if r.ttft_s is not None
+        )
+        records["ttft_poisson"] = {
+            "arrival_rate_hz": 1.0 / 0.08,
+            "requests": n_arr,
+            "p50_s": float(np.percentile(ttfts, 50)),
+            "p95_s": float(np.percentile(ttfts, 95)),
+            "max_s": float(ttfts[-1]),
+        }
+        return records
+
+    t0 = time.perf_counter()
+    run()
+    us = (time.perf_counter() - t0) * 1e6
+    parts = []
+    for arch, rec in records["configs"].items():
+        parts.append(
+            f"{arch}:x{rec['speedup']:.1f}/dec x{rec['decode_speedup']:.2f}"
+            f"(retr={rec['retraces_after_warmup']}"
+            f",bit={int(rec['greedy_bit_identical'])})"
+        )
+    tt = records["ttft_poisson"]
+    derived = (
+        ";".join(parts)
+        + f";ttft_p50={tt['p50_s']:.3f}s;ttft_p95={tt['p95_s']:.3f}s"
+    )
+    emit("serve", us, derived, records)
+    (ROOT / "BENCH_serve.json").write_text(json.dumps(records, indent=1))
+
+
 # -------------------------------------------------------- end-to-end ------
 
 
@@ -746,6 +946,7 @@ BENCHES = {
     "streaming_plan_lm": lambda fast: bench_streaming_lm(),
     "plan": bench_plan_suite,
     "stream": bench_stream_suite,
+    "serve": bench_serve_suite,
     "train_smoke": lambda fast: bench_train_smoke(),
     "serve_smoke": lambda fast: bench_serve_smoke(),
     "roofline_summary": lambda fast: bench_roofline_summary(),

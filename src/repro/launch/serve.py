@@ -3,8 +3,14 @@
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --smoke \
         --requests 16 --max-new 24 [--stream] [--multi-pu K] [--aimc]
 
-``--stream`` plans host->HBM weight streaming with the paper's two-phase
-scheduler and prints the plan summary (stall reduction, utilization);
+The decode loop is device-resident by default (fused sample-append
+blocks, bucketed batched prefill -- DESIGN.md SS7); ``--host-sampling``
+falls back to the legacy host loop (per-token decode jit + numpy
+sampling), ``--prefill-buckets 16,32,...`` overrides the power-of-two
+prompt-length ladder, and ``--decode-block`` caps the fused rounds per
+host sync.  ``--stream`` plans host->HBM weight streaming with the
+paper's two-phase scheduler and prints the plan summary (stall
+reduction, utilization);
 ``--multi-pu K`` partitions the model's GEMM sequence across K PU
 profiles (repro.plan.partition) and, after the decode loop drains,
 *executes* the partition through the stage-parallel streaming runtime
@@ -44,6 +50,20 @@ def main() -> int:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--host-sampling", action="store_true",
+                    help="legacy host-loop rounds (per-token decode jit, "
+                         "numpy sampling, lane-isolated prefill) instead "
+                         "of the device-resident decode loop")
+    ap.add_argument("--prefill-buckets", default=None, metavar="N,N,...",
+                    help="comma-separated prompt-length buckets for "
+                         "batched prefill (default: power-of-two ladder "
+                         "16,32,... capped at max_len)")
+    ap.add_argument("--decode-block", type=int, default=32, metavar="R",
+                    help="max fused decode rounds per host sync "
+                         "(power-of-two blocks up to R; default 32)")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip pre-compiling the prefill-bucket/decode-"
+                         "block trace grid at startup")
     ap.add_argument("--stream", action="store_true",
                     help="plan weight streaming (two-phase scheduler)")
     ap.add_argument("--multi-pu", type=int, default=0, metavar="K",
@@ -84,6 +104,13 @@ def main() -> int:
         max_new_tokens=args.max_new,
         temperature=args.temperature,
         seed=args.seed,
+        host_sampling=args.host_sampling,
+        prefill_buckets=(
+            tuple(int(b) for b in args.prefill_buckets.split(","))
+            if args.prefill_buckets
+            else None
+        ),
+        max_decode_block=args.decode_block,
         stream_pu=host_offload_config() if args.stream else None,
         stream_pus=(
             [
@@ -104,6 +131,8 @@ def main() -> int:
         target_bubble=args.target_bubble,
     )
     engine = ServingEngine(cfg, params, serve_cfg)
+    if not args.no_warmup:
+        engine.warmup()
 
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):

@@ -33,17 +33,28 @@ class ModelAPI:
     param_axes: Callable
     train_loss: Callable
     prefill: Callable          # (cfg, params, batch) -> (logits, cache)
-    decode_step: Callable
+    decode_step: Callable      # pos: () shared or (B,) per-slot positions
     init_cache: Callable
     cache_axes: Callable
+    # attention-backed families accept batch["lengths"] for bucketed
+    # right-padded batched prefill (causal masking hides the pad tail);
+    # recurrent families (ssm/hybrid) must see exact-length prompts --
+    # padded steps would flow through the conv/SSD state.
+    supports_bucketed_prefill: bool = False
 
 
 def _tf_prefill(cfg, params, batch):
-    return transformer.prefill(cfg, params, batch["tokens"], batch.get("patch_embeds"))
+    return transformer.prefill(
+        cfg, params, batch["tokens"], batch.get("patch_embeds"),
+        lengths=batch.get("lengths"),
+    )
 
 
 def _encdec_prefill(cfg, params, batch):
-    return encdec.prefill(cfg, params, batch["tokens"], batch["frames"])
+    return encdec.prefill(
+        cfg, params, batch["tokens"], batch["frames"],
+        lengths=batch.get("lengths"),
+    )
 
 
 def _hybrid_prefill(cfg, params, batch):
@@ -63,6 +74,7 @@ _TRANSFORMER_API = ModelAPI(
     decode_step=transformer.decode_step,
     init_cache=transformer.init_cache,
     cache_axes=transformer.cache_axes,
+    supports_bucketed_prefill=True,
 )
 
 
@@ -102,6 +114,7 @@ def get_api(cfg: ModelConfig) -> ModelAPI:
             decode_step=encdec.decode_step,
             init_cache=encdec.init_cache,
             cache_axes=encdec.cache_axes,
+            supports_bucketed_prefill=True,
         )
     raise ValueError(f"unknown family {fam}")
 
@@ -146,13 +159,18 @@ def batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, tuple]:
 
 
 def decode_inputs_struct(cfg: ModelConfig, shape: ShapeConfig):
-    """(cache, tokens, pos) abstract inputs for decode_step."""
+    """(cache, tokens, pos) abstract inputs for decode_step.
+
+    ``pos`` is the per-slot position vector (B,): the serving engine
+    decodes slots at staggered positions, so the lowered decode cell
+    must carry one write position per lane.
+    """
     api = get_api(cfg)
     cache = jax.eval_shape(
         lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len)
     )
     tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
-    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    pos = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
     return cache, tokens, pos
 
 

@@ -31,13 +31,16 @@ def gqa_attention(
     v: jax.Array,                      # (B, Sk, KV, hd)
     *,
     q_positions: Optional[jax.Array] = None,   # (B, Sq) absolute positions
-    kv_valid_len: Optional[jax.Array] = None,  # scalar/() -- # valid cache slots
+    kv_valid_len: Optional[jax.Array] = None,  # () or (B,) -- # valid cache
+                                               # slots (per-lane for batched
+                                               # decode at staggered positions)
     causal: bool = True,
     window: Optional[int] = None,              # static sliding window
     window_arr: Optional[jax.Array] = None,    # dynamic per-call window (scalar)
-    kv_positions: Optional[jax.Array] = None,  # (Sk,) absolute position per
-                                               # cache slot (ring buffers);
-                                               # negative = never written
+    kv_positions: Optional[jax.Array] = None,  # (Sk,) or (B, Sk) absolute
+                                               # position per cache slot (ring
+                                               # buffers); negative = never
+                                               # written
     chunk: int = 512,
 ) -> jax.Array:
     b, sq, h, hd = q.shape
@@ -71,6 +74,8 @@ def gqa_attention(
     vc = v.reshape(b, n_chunks, chunk, kv, hd).swapaxes(0, 1)
 
     limit = jnp.asarray(sk if kv_valid_len is None else kv_valid_len, jnp.int32)
+    if limit.ndim == 1:                       # per-lane valid length (B,)
+        limit = limit[:, None, None, None]    # -> broadcast vs (B, Sq, H, C)
     if window_arr is not None:
         win = jnp.asarray(window_arr, jnp.int32)
     elif window is not None:
@@ -139,13 +144,20 @@ def _decode_attention(
     else:
         win = jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
     limit = jnp.asarray(sk if kv_valid_len is None else kv_valid_len, jnp.int32)
+    if limit.ndim == 1:                       # per-lane valid length (B,)
+        limit = limit[:, None, None, None, None]
 
     qg = (q * scale).reshape(b, sq, kv, groups, hd)
     s = jnp.einsum("bqkgd,bskd->bqkgs", qg, k, preferred_element_type=jnp.float32)
     if kv_positions is not None:
         # ring buffer: each slot carries its absolute position; negative
-        # positions mark never-written slots.
-        col = kv_positions.astype(jnp.int32)[None, None, None, None, :]
+        # positions mark never-written slots.  (Sk,) shared or (B, Sk)
+        # per-lane (batched decode at staggered positions).
+        kvp = kv_positions.astype(jnp.int32)
+        if kvp.ndim == 1:
+            col = kvp[None, None, None, None, :]
+        else:
+            col = kvp[:, None, None, None, :]
         valid = col >= 0
     else:
         col = jnp.arange(sk, dtype=jnp.int32)[None, None, None, None, :]

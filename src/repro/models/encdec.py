@@ -131,8 +131,14 @@ def _dec_layer_fn(
     new_cache = None
     if self_cache is not None:
         ck, cv = self_cache
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, decode_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, decode_pos, 0, 0))
+        if jnp.ndim(decode_pos) > 0:
+            # staggered batched decode: each lane writes at its own pos
+            lane = jnp.arange(ck.shape[0])
+            ck = ck.at[lane, decode_pos].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[lane, decode_pos].set(v[:, 0].astype(cv.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, decode_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, decode_pos, 0, 0))
         new_cache = (ck, cv)
         k, v = ck.astype(x.dtype), cv.astype(x.dtype)
         valid = decode_pos + x.shape[1]
@@ -223,8 +229,19 @@ def cache_axes(cfg: ModelConfig):
     return {"self_k": kv_ax, "self_v": kv_ax, "cross_k": cr_ax, "cross_v": cr_ax}
 
 
-def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, frames: jax.Array):
-    """Encode + teacher-forced pass, emitting all caches for decode."""
+def prefill(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jax.Array,
+    frames: jax.Array,
+    lengths: Optional[jax.Array] = None,
+):
+    """Encode + teacher-forced pass, emitting all caches for decode.
+
+    ``lengths`` (B,) supports bucketed batched prefill (right-padded
+    decoder prompts): logits come from each row's last real token; the
+    padded cache tail stays causally masked until decode overwrites it.
+    """
     enc_out = encode(cfg, params, frames)
     b, s = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
@@ -244,15 +261,19 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, frames: jax.Array
         body, x, (params["dec_layers"], cache0["self_k"], cache0["self_v"])
     )
     x = apply_norm(cfg, x, params.get("dec_norm"))
-    logits = (x[:, -1] @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+    x_last = x[:, -1] if lengths is None else x[jnp.arange(b), lengths - 1]
+    logits = (x_last @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
     return logits, {"self_k": sk, "self_v": sv, "cross_k": crk, "cross_v": crv}
 
 
 def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array, pos: jax.Array):
     b = tokens.shape[0]
-    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = (
+        jnp.broadcast_to(pos, (b, 1)) if pos.ndim == 0 else pos[:, None]
+    ).astype(jnp.int32)
     x = params["embed"].astype(_dtype(cfg))[tokens]
-    x = x + params["dec_pos"].astype(x.dtype)[pos][None, None, :]
+    x = x + params["dec_pos"].astype(x.dtype)[positions]
 
     def body(x, xs):
         lp, sk, sv, ck, cv = xs

@@ -107,8 +107,14 @@ def _shared_block(
     new_cache = None
     if cache_kv is not None:
         ck, cv = cache_kv
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, decode_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, decode_pos, 0, 0))
+        if jnp.ndim(decode_pos) > 0:
+            # staggered batched decode: each lane writes at its own pos
+            lane = jnp.arange(ck.shape[0])
+            ck = ck.at[lane, decode_pos].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[lane, decode_pos].set(v[:, 0].astype(cv.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, decode_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, decode_pos, 0, 0))
         new_cache = (ck, cv)
         k, v = ck.astype(x.dtype), cv.astype(x.dtype)
         valid = decode_pos + x.shape[1]
@@ -273,7 +279,10 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array, 
     b = tokens.shape[0]
     n_groups, tail = _groups(cfg)
     every = cfg.hybrid_attn_every
-    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = (
+        jnp.broadcast_to(pos, (b, 1)) if pos.ndim == 0 else pos[:, None]
+    ).astype(jnp.int32)
     x = params["embed"].astype(_dtype(cfg))[tokens]
     mamba_flat = _mamba_param_slices(cfg, params)
 

@@ -141,7 +141,7 @@ def _layer_fn(
     window: jax.Array,            # () int32
     positions: jax.Array,         # (B, S)
     cache_kv: Optional[Tuple[jax.Array, jax.Array]],   # (B, Smax, KV, hd) x2
-    decode_pos: Optional[jax.Array],                   # () int32
+    decode_pos: Optional[jax.Array],                   # () or (B,) int32
     return_kv: bool,
 ):
     dt = x.dtype
@@ -159,25 +159,39 @@ def _layer_fn(
         # position pos - ((pos - s) mod L); never-written slots come out
         # negative and are masked in attention.
         ring = bool(cfg.kv_ring and cfg.window and not cfg.global_every)
+        # decode_pos may be () (all lanes aligned) or (B,) (staggered
+        # batched decode: each lane writes its own cache position)
+        per_lane = jnp.ndim(decode_pos) > 0
         write_pos = decode_pos % cache_len if ring else decode_pos
         if ring:
             slots = jnp.arange(cache_len, dtype=jnp.int32)
-            kv_positions = decode_pos - ((decode_pos - slots) % cache_len)
+            if per_lane:
+                kv_positions = decode_pos[:, None] - (
+                    (decode_pos[:, None] - slots[None, :]) % cache_len
+                )
+            else:
+                kv_positions = decode_pos - ((decode_pos - slots) % cache_len)
+
+        def cwrite(buf, new):
+            new = new.astype(buf.dtype)
+            if per_lane:
+                # one-token decode: scatter each lane's row at its own pos
+                return buf.at[jnp.arange(buf.shape[0]), write_pos].set(new[:, 0])
+            start = (0, write_pos) + (0,) * (buf.ndim - 2)
+            return jax.lax.dynamic_update_slice(buf, new, start)
+
         if cfg.kv_quant:
             ck, cv, ke, ve = cache_kv
             kq, ke_new = kv_quantize(k)
             vq, ve_new = kv_quantize(v)
-            ck = jax.lax.dynamic_update_slice(ck, kq, (0, write_pos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, vq, (0, write_pos, 0, 0))
-            ke = jax.lax.dynamic_update_slice(ke, ke_new, (0, write_pos, 0))
-            ve = jax.lax.dynamic_update_slice(ve, ve_new, (0, write_pos, 0))
+            ck, cv = cwrite(ck, kq), cwrite(cv, vq)
+            ke, ve = cwrite(ke, ke_new), cwrite(ve, ve_new)
             new_cache = (ck, cv, ke, ve)
             k_att = kv_dequantize(ck, ke, dt)
             v_att = kv_dequantize(cv, ve, dt)
         else:
             ck, cv = cache_kv
-            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, write_pos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, write_pos, 0, 0))
+            ck, cv = cwrite(ck, k), cwrite(cv, v)
             new_cache = (ck, cv)
             k_att, v_att = ck, cv
         valid = decode_pos + x.shape[1]
@@ -296,16 +310,32 @@ def prefill(
     params: dict,
     tokens: jax.Array,
     patch_embeds: Optional[jax.Array] = None,
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """Full-context pass -> (last-token logits (B,V), kv cache (L,B,S,KV,hd) x2).
 
+    ``lengths`` (B,) enables bucketed batched prefill: rows are true
+    prompts right-padded to a shared bucket length; logits are gathered
+    at each row's last *real* token (``lengths - 1``).  The cache keeps
+    the padded tail -- causal masking hides those slots from every query
+    at position < length, and batched decode overwrites slot ``length``
+    (then length+1, ...) before it ever becomes visible, so the tail is
+    never attended to.
+
     Ring configs (kv_ring + pure SWA) return the ring layout: the last
-    ``window`` tokens placed at slots ``position % window``.
+    ``window`` tokens placed at slots ``position % window``; the ring
+    re-layout is whole-sequence, so it composes with ``lengths=None``
+    only (the serving engine admits ring configs lane-isolated).
     """
     hidden, _, cache = forward_hidden(
         cfg, params, tokens, patch_embeds, return_cache=True
     )
     if cfg.kv_ring and cfg.window and not cfg.global_every:
+        if lengths is not None:
+            raise ValueError(
+                "bucketed prefill (lengths) is unsupported for kv_ring "
+                "configs: the ring re-layout is a whole-sequence shift"
+            )
         s = tokens.shape[1]
         w = min(s, cfg.window)
         ring_len = cfg.window if s >= cfg.window else s
@@ -323,6 +353,13 @@ def prefill(
             return out.at[:, :, slots].set(last)
 
         cache = tuple(conv(c) for c in cache)
+    if lengths is not None:
+        b = tokens.shape[0]
+        h_last = hidden[jnp.arange(b), lengths - 1]
+        logits = (
+            h_last @ _unembed_matrix(cfg, params).astype(hidden.dtype)
+        ).astype(jnp.float32)
+        return logits, cache
     return logits_last(cfg, params, hidden), cache
 
 
@@ -362,11 +399,15 @@ def decode_step(
     params: dict,
     cache: Tuple[jax.Array, jax.Array],
     tokens: jax.Array,               # (B, 1)
-    pos: jax.Array,                  # () int32 -- current write position
+    pos: jax.Array,                  # () or (B,) int32 -- write position
+                                     # (per-lane when slots are staggered)
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """One token step against a KV cache -> (logits (B,V), new cache)."""
     b = tokens.shape[0]
-    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = (
+        jnp.broadcast_to(pos, (b, 1)) if pos.ndim == 0 else pos[:, None]
+    ).astype(jnp.int32)
     x = _embed(cfg, params, tokens, None, positions)
     windows = layer_windows(cfg)
 

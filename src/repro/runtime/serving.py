@@ -21,9 +21,17 @@ every inference round, exactly the NIU read-modify-write loop.
 Request flow (continuous batching, decode-centric):
 
     submit(prompt tokens) -> queue
-    engine step: admit up to free slots, prefill each new request,
-                 one batched decode_step for all active slots,
-                 retire slots that hit eos/max_tokens.
+    engine round: admit waiting requests into free slots (bucketed batched
+                  prefill, one call per length bucket), then run a fused
+                  block of decode rounds entirely on device.
+
+The decode hot path is **device-resident** (DESIGN.md SS7): sampling,
+append, per-slot position/remaining bookkeeping and termination flags all
+live inside one jitted ``lax.scan`` block; between host syncs the engine
+only moves a handful of scalars per slot.  ``ServeConfig.host_sampling``
+keeps the legacy host-loop round (one decode jit per token, numpy
+sampling) as an escape hatch and as the reference for the greedy
+bit-identity property tests.
 """
 from __future__ import annotations
 
@@ -53,6 +61,21 @@ class ServeConfig:
     eos_token: int = -1            # -1: never stop on a token
     temperature: float = 0.0       # 0 => greedy
     seed: int = 0
+    # --- device-resident round knobs ---------------------------------------
+    # escape hatch: legacy host-loop round (per-token decode jit, numpy
+    # sampling, lane-isolated eager prefill) -- the pre-device-resident
+    # engine, kept for A/B benchmarking and bit-identity tests
+    host_sampling: bool = False
+    # prompt length buckets for batched prefill; None -> power-of-two
+    # ladder 16, 32, ... capped at max_len.  Prompts are right-padded to
+    # the smallest bucket >= their length so warm traffic reuses a
+    # handful of compiled traces.
+    prefill_buckets: Optional[Sequence[int]] = None
+    # max fused decode rounds per host sync (block sizes are the powers
+    # of two <= this, so traces stay bounded); 1 degenerates to one
+    # round per sync
+    max_decode_block: int = 32
+    pad_token: int = 0             # token fed to inactive/padded lanes
     # weight streaming (host->HBM level); None disables planning
     stream_pu: Optional[PUConfig] = None
     # multi-PU partitioned streaming: the model's layer sequence is split
@@ -89,6 +112,20 @@ class Request:
         return self.first_token_at - self.submitted_at
 
 
+def _pow2_ceil(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def default_prefill_buckets(max_len: int) -> Tuple[int, ...]:
+    """Power-of-two ladder 16, 32, ... capped at ``max_len``."""
+    out, b = [], 16
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(sorted(set(out)))
+
+
 class ServingEngine:
     """Continuous-batching LM server over the uniform model API."""
 
@@ -110,12 +147,13 @@ class ServingEngine:
         self._rng = np.random.default_rng(serve_cfg.seed)
         self._key = jax.random.PRNGKey(serve_cfg.seed)
 
-        # request/slot state
+        # request/slot state (host bookkeeping)
         self._queue: deque[Request] = deque()
         self._uid = 0
         self._slots: List[Optional[Request]] = [None] * serve_cfg.max_batch
         self._slot_pos = np.zeros(serve_cfg.max_batch, np.int32)
         self._slot_remaining = np.zeros(serve_cfg.max_batch, np.int32)
+        self._slot_emitted = np.zeros(serve_cfg.max_batch, np.int32)
         self.completed: List[Request] = []
         self.rounds = 0
 
@@ -124,11 +162,67 @@ class ServingEngine:
             cfg, serve_cfg.max_batch, serve_cfg.max_len
         )
 
-        # jitted steps (single-device path by default; mesh-sharded when
-        # mesh+rules are provided)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: self.api.decode_step(cfg, p, c, t, pos)
+        # trace bookkeeping: each counter increments only while jit is
+        # *tracing* the wrapped function, so steady-state traffic that
+        # reuses compiled buckets leaves them flat
+        self.trace_counts: Dict[str, int] = {"decode": 0, "prefill": 0}
+        # wall-clock per admitted prefill call, keyed by bucket length
+        self.prefill_bucket_s: Dict[int, List[float]] = {}
+
+        # ring caches re-layout the whole sequence at prefill time, which
+        # does not compose with per-lane padded lengths; recurrent
+        # families must see exact-length prompts (api flag)
+        ring = bool(cfg.kv_ring and cfg.window and not cfg.global_every)
+        self.bucketed_prefill = self.api.supports_bucketed_prefill and not ring
+        ladder = [
+            b for b in (
+                serve_cfg.prefill_buckets
+                or default_prefill_buckets(serve_cfg.max_len)
+            )
+            if b <= serve_cfg.max_len
+        ]
+        # max_len always terminates the ladder so every admissible prompt
+        # (truncated to < max_len) has a bucket
+        self._buckets = tuple(sorted(set(ladder + [serve_cfg.max_len])))
+
+        # legacy host-loop decode step (also the host_sampling path)
+        def _decode_traced(p, c, t, pos):
+            self.trace_counts["decode"] += 1
+            return self.api.decode_step(cfg, p, c, t, pos)
+
+        self._decode = jax.jit(_decode_traced)
+
+        # device-resident decode state: everything the steady-state loop
+        # needs lives here between host syncs
+        B = serve_cfg.max_batch
+        self._state: Dict[str, jax.Array] = {
+            "tokens": jnp.zeros((B, 1), jnp.int32),
+            "pos": jnp.zeros((B,), jnp.int32),
+            "remaining": jnp.zeros((B,), jnp.int32),
+            "active": jnp.zeros((B,), jnp.bool_),
+            "out_buf": jnp.zeros((B, serve_cfg.max_len), jnp.int32),
+            "out_len": jnp.zeros((B,), jnp.int32),
+            "key": jax.random.PRNGKey(serve_cfg.seed),
+        }
+
+        # cache and decode state are donated: the KV cache never crosses
+        # the jit boundary by copy, it lives in the same device buffers
+        # round after round (the "device-resident" in the name)
+        def _decode_block(p, cache, state, n_rounds):
+            self.trace_counts["decode"] += 1
+            return self._decode_block_impl(p, cache, state, n_rounds)
+
+        self._decode_block = jax.jit(
+            _decode_block, static_argnums=3, donate_argnums=(1, 2)
         )
+
+        def _admit_block(p, cache, state, tokens, lengths, slots, max_new):
+            self.trace_counts["prefill"] += 1
+            return self._admit_impl(
+                p, cache, state, tokens, lengths, slots, max_new
+            )
+
+        self._admit_block = jax.jit(_admit_block, donate_argnums=(1, 2))
 
         # --- paper machinery ------------------------------------------------
         self.streaming_plan: Optional[StreamingPlan] = None
@@ -169,10 +263,14 @@ class ServingEngine:
 
     # -- client API --------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: Optional[int] = None) -> int:
+        # a request can never generate past the cache: clamp the budget so
+        # at least one prompt token survives truncation (max_len - 2 keeps
+        # one prompt slot + the pos < max_len - 1 stop)
+        budget = max_new_tokens or self.serve_cfg.max_new_tokens
         req = Request(
             uid=self._uid,
             prompt=np.asarray(prompt, np.int32),
-            max_new_tokens=max_new_tokens or self.serve_cfg.max_new_tokens,
+            max_new_tokens=max(1, min(budget, self.serve_cfg.max_len - 2)),
             submitted_at=time.perf_counter(),
         )
         self._uid += 1
@@ -192,19 +290,301 @@ class ServingEngine:
             self.step()
         return self.completed
 
+    def warmup(self):
+        """Pre-compile the bounded trace grid so live traffic never
+        retraces: every (prompt bucket x pow2 admit width) prefill shape
+        and every pow2 decode-block length.  Warmup admission rows
+        scatter out of bounds and no slot is active, so the served state
+        is untouched -- except the sampling PRNG stream, which each
+        warmup call advances exactly like a live call when
+        ``temperature > 0`` (the engine stays deterministic for a fixed
+        warmup + traffic sequence)."""
+        sc = self.serve_cfg
+        if sc.host_sampling:
+            tokens = jnp.zeros((sc.max_batch, 1), jnp.int32)
+            self._decode(
+                self.params, self._cache, tokens,
+                jnp.zeros((sc.max_batch,), jnp.int32),
+            )
+            return
+        if self.bucketed_prefill:
+            nbs, nb = [], 1
+            while nb < _pow2_ceil(sc.max_batch):
+                nbs.append(nb)
+                nb *= 2
+            nbs.append(_pow2_ceil(sc.max_batch))
+            for S in self._buckets:
+                for nb in nbs:
+                    # cache/state are donated into the call: reassign
+                    self._cache, self._state, _, _ = self._admit_block(
+                        self.params, self._cache, self._state,
+                        jnp.full((nb, S), sc.pad_token, jnp.int32),
+                        jnp.ones((nb,), jnp.int32),
+                        jnp.full((nb,), sc.max_batch, jnp.int32),  # dropped
+                        jnp.ones((nb,), jnp.int32),
+                    )
+        R = 1
+        while R <= sc.max_decode_block:
+            self._cache, self._state = self._decode_block(
+                self.params, self._cache, self._state, R
+            )
+            R *= 2
+
     # -- engine round -------------------------------------------------------
     def step(self):
-        """One engine round: AIMC refresh -> admit+prefill -> batched decode."""
+        """One engine round (host path) or one fused block (device path)."""
         sc = self.serve_cfg
         if self.niu is not None and self.rounds % sc.aimc_refresh_every == 0:
             self._key, sub = jax.random.split(self._key)
             self.params = self.niu.refresh(sub)
+        if sc.host_sampling:
+            self._step_host()
+        else:
+            self._step_device()
 
+    # ======================================================================
+    # device-resident path
+    # ======================================================================
+
+    def _sample_device(self, key, logits):
+        """On-device sampling shared by admission and decode: greedy
+        argmax, or temperature categorical consuming the threaded key."""
+        sc = self.serve_cfg
+        if sc.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits.astype(jnp.float32) / sc.temperature, axis=-1
+            ).astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return key, tok
+
+    def _prefill_batch(self, tokens, lengths=None):
+        """Model-API prefill batch for ``tokens``, with the stub modality
+        inputs each family expects (shared by both admission paths)."""
+        dt = jnp.bfloat16 if self.cfg.dtype == "bfloat16" else jnp.float32
+        batch: Dict[str, jax.Array] = {"tokens": tokens}
+        if lengths is not None:
+            batch["lengths"] = lengths
+        if self.cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (tokens.shape[0], self.cfg.vision_patches, self.cfg.d_model),
+                dt,
+            )
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (tokens.shape[0], self.cfg.encoder_frames, self.cfg.d_model),
+                dt,
+            )
+        return batch
+
+    def _decode_block_impl(self, params, cache, state, n_rounds: int):
+        """``n_rounds`` fused decode rounds: sample-append, per-slot
+        position/remaining bookkeeping and done flags all stay on device;
+        generated tokens land in the device-side ``out_buf`` ring so the
+        host only reads them at request completion."""
+        sc = self.serve_cfg
+        B = sc.max_batch
+        lane = jnp.arange(B)
+
+        def one(carry, _):
+            cache, st = carry
+            logits, cache = self.api.decode_step(
+                self.cfg, params, cache, st["tokens"], st["pos"]
+            )
+            key, tok = self._sample_device(st["key"], logits)
+            act = st["active"]
+            acti = act.astype(jnp.int32)
+            tok = jnp.where(act, tok, sc.pad_token)
+            # inactive lanes write at an out-of-bounds column -> dropped
+            col = jnp.where(act, st["out_len"], sc.max_len)
+            out_buf = st["out_buf"].at[lane, col].set(tok, mode="drop")
+            out_len = st["out_len"] + acti
+            pos = st["pos"] + acti
+            rem = st["remaining"] - acti
+            done = (rem <= 0) | (pos >= sc.max_len - 1)
+            if sc.eos_token >= 0:
+                done = done | (tok == sc.eos_token)
+            st = {
+                "tokens": tok[:, None],
+                "pos": pos,
+                "remaining": rem,
+                "active": act & ~done,
+                "out_buf": out_buf,
+                "out_len": out_len,
+                "key": key,
+            }
+            return (cache, st), None
+
+        (cache, state), _ = jax.lax.scan(
+            one, (cache, state), None, length=n_rounds
+        )
+        return cache, state
+
+    def _admit_impl(self, params, cache, state, tokens, lengths, slots, max_new):
+        """Batched prefill of one length bucket + on-device admission:
+        sample each prompt's first token, scatter the prefilled KV lanes
+        and the per-slot decode state in one jitted update.  Dummy rows
+        (bucket padding) carry ``slots == max_batch`` and are dropped by
+        the out-of-bounds scatter mode."""
+        sc = self.serve_cfg
+        batch = self._prefill_batch(
+            tokens, lengths if self.bucketed_prefill else None
+        )
+        logits, one_cache = self.api.prefill(self.cfg, params, batch)
+        key, tok = self._sample_device(state["key"], logits)
+
+        cache = scatter_cache_lanes(cache, one_cache, slots)
+        # a request whose budget is one token (or whose first token is
+        # eos) completes at admission: it never occupies a decode slot
+        done0 = max_new <= 1
+        if sc.eos_token >= 0:
+            done0 = done0 | (tok == sc.eos_token)
+        state = {
+            "tokens": state["tokens"].at[slots, 0].set(tok, mode="drop"),
+            "pos": state["pos"].at[slots].set(lengths, mode="drop"),
+            "remaining": state["remaining"].at[slots].set(
+                max_new - 1, mode="drop"
+            ),
+            "active": state["active"].at[slots].set(~done0, mode="drop"),
+            "out_buf": state["out_buf"].at[slots, 0].set(tok, mode="drop"),
+            "out_len": state["out_len"].at[slots].set(1, mode="drop"),
+            "key": key,
+        }
+        return cache, state, tok, done0
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self._buckets:
+            if b >= n:
+                return b
+        return self._buckets[-1]
+
+    def _truncated_prompt(self, req: Request) -> np.ndarray:
+        sc = self.serve_cfg
+        keep = max(1, sc.max_len - req.max_new_tokens - 1)
+        return req.prompt[-keep:]
+
+    def _admit_device(self):
+        """Admit every waiting request a free slot can take.  Requests in
+        the same round whose prompts fall in the same length bucket share
+        a single prefill call."""
+        sc = self.serve_cfg
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        admits: List[Tuple[int, Request, np.ndarray]] = []
+        while free and self._queue:
+            req = self._queue.popleft()
+            admits.append((free.pop(0), req, None))
+        if not admits:
+            return
+        groups: Dict[int, List[Tuple[int, Request, np.ndarray]]] = {}
+        for slot, req, _ in admits:
+            prompt = self._truncated_prompt(req)
+            S = (
+                self._bucket_for(len(prompt))
+                if self.bucketed_prefill
+                else len(prompt)
+            )
+            groups.setdefault(S, []).append((slot, req, prompt))
+
+        for S, group in sorted(groups.items()):
+            nb = len(group)
+            # pad the admit batch to a power of two so the (bucket, nb)
+            # trace set stays bounded; dummy rows scatter out of bounds
+            nb_pad = _pow2_ceil(nb) if self.bucketed_prefill else nb
+            tokens = np.full((nb_pad, S), sc.pad_token, np.int32)
+            lengths = np.ones((nb_pad,), np.int32)
+            slots = np.full((nb_pad,), sc.max_batch, np.int32)
+            max_new = np.ones((nb_pad,), np.int32)
+            for j, (slot, req, prompt) in enumerate(group):
+                tokens[j, : len(prompt)] = prompt
+                lengths[j] = len(prompt)
+                slots[j] = slot
+                max_new[j] = req.max_new_tokens
+            t0 = time.perf_counter()
+            self._cache, self._state, tok, done0 = self._admit_block(
+                self.params, self._cache, self._state,
+                jnp.asarray(tokens), jnp.asarray(lengths),
+                jnp.asarray(slots), jnp.asarray(max_new),
+            )
+            done0_np = np.asarray(done0)
+            self.prefill_bucket_s.setdefault(S, []).append(
+                time.perf_counter() - t0
+            )
+            now = time.perf_counter()
+            tok_np = np.asarray(tok) if done0_np[:nb].any() else None
+            for j, (slot, req, prompt) in enumerate(group):
+                req.first_token_at = now
+                if done0_np[j]:
+                    req.out_tokens = [int(tok_np[j])]
+                    req.done_at = now
+                    self.completed.append(req)
+                else:
+                    self._slots[slot] = req
+                    self._slot_emitted[slot] = 1
+                    self._slot_pos[slot] = len(prompt)
+
+    def _step_device(self):
+        """One fused block: admit (bucketed batched prefill), then run
+        the largest power-of-two decode block that no active request can
+        out-finish, then sync the per-slot scalars."""
+        sc = self.serve_cfg
+        self._admit_device()
+        if not any(s is not None for s in self._slots):
+            self.rounds += 1
+            return
+        remaining = [
+            max(1, req.max_new_tokens - int(self._slot_emitted[i]))
+            for i, req in enumerate(self._slots)
+            if req is not None
+        ]
+        cap = sc.max_decode_block
+        if self.niu is not None:
+            # AIMC refresh happens between host rounds; keep per-round
+            # granularity so every round sees a fresh noise instance
+            cap = 1
+        # queue-aware block sizing: with admissions waiting, sync when
+        # the earliest slot frees; with an empty queue a finished lane
+        # just goes inactive inside the block (the batched step computes
+        # every lane regardless), so run until the *last* slot could
+        # finish and save the host syncs
+        r = min(remaining) if self._queue else max(remaining)
+        r = max(1, min(r, cap))
+        R = 1 << (r.bit_length() - 1)          # largest power of two <= r
+        self._cache, self._state = self._decode_block(
+            self.params, self._cache, self._state, R
+        )
+        self.rounds += R
+
+        active = np.asarray(self._state["active"])
+        out_len = np.asarray(self._state["out_len"])
+        now = time.perf_counter()
+        for i, req in enumerate(self._slots):
+            if req is None:
+                continue
+            self._slot_emitted[i] = int(out_len[i])
+            if not active[i]:
+                n = int(out_len[i])
+                req.out_tokens = [
+                    int(t) for t in np.asarray(self._state["out_buf"][i, :n])
+                ]
+                req.done_at = now
+                self.completed.append(req)
+                self._slots[i] = None
+
+    # ======================================================================
+    # legacy host-loop path (ServeConfig.host_sampling escape hatch)
+    # ======================================================================
+
+    def _step_host(self):
+        """One engine round: admit+prefill -> batched decode, with
+        sampling and request bookkeeping on the host (the pre-device-
+        resident engine, kept as the A/B reference)."""
+        sc = self.serve_cfg
         # admit
         for i in range(sc.max_batch):
             if self._slots[i] is None and self._queue:
                 req = self._queue.popleft()
-                self._admit(i, req)
+                self._admit_host(i, req)
 
         if not self.active:
             self.rounds += 1
@@ -221,12 +601,13 @@ class ServingEngine:
                     else int(req.prompt[-1])
                 )
                 tokens[i, 0] = last
-        # single shared position per call: slots are aligned because every
-        # prefill wrote its prompt left-aligned; per-slot positions tracked
-        # host-side and passed as the max (cache updates are per-lane).
-        pos = int(self._slot_pos.max())
+        # per-slot position vector: each lane writes its KV at its own
+        # position, so staggered admissions never clobber a neighbour's
+        # cache (the old engine passed the max over slots -- a later
+        # admit wrote its KV at an earlier slot's position)
         logits, self._cache = self._decode(
-            self.params, self._cache, jnp.asarray(tokens), jnp.int32(pos)
+            self.params, self._cache, jnp.asarray(tokens),
+            jnp.asarray(self._slot_pos),
         )
         logits = np.asarray(logits, np.float32)
 
@@ -250,33 +631,29 @@ class ServingEngine:
                 self._slots[i] = None
         self.rounds += 1
 
-    def _admit(self, slot: int, req: Request):
-        """Prefill a request into one cache lane."""
+    def _admit_host(self, slot: int, req: Request):
+        """Prefill a request into one cache lane (lane-isolated)."""
         sc = self.serve_cfg
-        prompt = req.prompt[-(sc.max_len - req.max_new_tokens - 1) :]
-        # lane-isolated prefill: run the model on this prompt alone, then
-        # scatter its kv into the batched cache at the slot index.
-        tokens = jnp.asarray(prompt[None, :], jnp.int32)
-        batch = {"tokens": tokens}
-        if self.cfg.family == "vlm":
-            batch["patch_embeds"] = jnp.zeros(
-                (1, self.cfg.vision_patches, self.cfg.d_model),
-                jnp.bfloat16 if self.cfg.dtype == "bfloat16" else jnp.float32,
-            )
-        if self.cfg.family == "encdec":
-            batch["frames"] = jnp.zeros(
-                (1, self.cfg.encoder_frames, self.cfg.d_model),
-                jnp.bfloat16 if self.cfg.dtype == "bfloat16" else jnp.float32,
-            )
+        prompt = self._truncated_prompt(req)
+        t0 = time.perf_counter()
+        batch = self._prefill_batch(jnp.asarray(prompt[None, :], jnp.int32))
         logits, cache = self.api.prefill(self.cfg, self.params, batch)
         self._cache = scatter_cache(self._cache, cache, slot, len(prompt))
-        self._slots[slot] = req
-        self._slot_pos[slot] = len(prompt)
-        self._slot_remaining[slot] = req.max_new_tokens
         tok = self._sample(np.asarray(logits, np.float32)[0])
+        self.prefill_bucket_s.setdefault(len(prompt), []).append(
+            time.perf_counter() - t0
+        )
         req.out_tokens.append(tok)
         req.first_token_at = time.perf_counter()
-        self._slot_remaining[slot] -= 1
+        # a single-token budget (or an eos first token) completes at
+        # admission instead of occupying a slot for a wasted decode round
+        if req.max_new_tokens <= 1 or tok == sc.eos_token:
+            req.done_at = req.first_token_at
+            self.completed.append(req)
+            return
+        self._slots[slot] = req
+        self._slot_pos[slot] = len(prompt)
+        self._slot_remaining[slot] = req.max_new_tokens - 1
 
     def _sample(self, logits: np.ndarray) -> int:
         if self.serve_cfg.temperature <= 0:
@@ -344,7 +721,12 @@ class ServingEngine:
             "rounds": float(self.rounds),
             "tokens_per_s": toks / total if total > 0 else 0.0,
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "device_resident": 0.0 if self.serve_cfg.host_sampling else 1.0,
+            "decode_traces": float(self.trace_counts["decode"]),
+            "prefill_traces": float(self.trace_counts["prefill"]),
         }
+        for b, times in sorted(self.prefill_bucket_s.items()):
+            out[f"prefill_s_bucket{b}"] = float(np.mean(times))
         if self.streaming_plan is not None:
             out.update(
                 {f"stream_{k}": v for k, v in self.streaming_plan.summary().items()}
@@ -410,30 +792,38 @@ class ServingEngine:
 # -------------------------------------------------------------------------
 
 
-def scatter_cache(batched_cache, one_cache, slot: int, length: int):
-    """Write a single-sequence prefill cache into lane ``slot``.
+def scatter_cache_lanes(batched_cache, group_cache, slots: jax.Array):
+    """Write a batch of prefilled sequences into cache lanes ``slots``.
 
-    Works over arbitrary cache pytrees: any array leaf whose second axis is
-    the batch axis (layers-leading layout (L, B, ...)) gets lane `slot`
-    overwritten with the new sequence's state.
+    Works over arbitrary cache pytrees: any array leaf whose second axis
+    is the batch axis (layers-leading layout (L, B, ...)) gets lanes
+    ``slots`` overwritten with the corresponding rows of ``group_cache``
+    (zero-padded to the full lane, so stale state beyond the prefill
+    never survives).  Rows whose slot index is out of bounds (the
+    bucket-padding dummies) are dropped by the scatter.
     """
 
     def upd(full, one):
         if not hasattr(full, "ndim") or full.ndim < 2:
             return full
-        # (L, 1, ...) -> write into (L, B, ...) at batch index `slot`.
-        seq_axes = full.ndim - 2
-        start = (0, slot) + (0,) * seq_axes
         one = one.astype(full.dtype)
-        pad_shape = list(full.shape)
-        pad_shape[1] = 1
+        pad_shape = (full.shape[0], one.shape[1]) + full.shape[2:]
         slicer = tuple(
             slice(0, min(o, f)) for o, f in zip(one.shape, pad_shape)
         )
         patch = jnp.zeros(pad_shape, full.dtype).at[slicer].set(one[slicer])
-        return jax.lax.dynamic_update_slice(full, patch, start)
+        return full.at[:, slots].set(patch, mode="drop")
 
-    return jax.tree.map(upd, batched_cache, one_cache)
+    return jax.tree.map(upd, batched_cache, group_cache)
+
+
+def scatter_cache(batched_cache, one_cache, slot: int, length: int):
+    """Write a single-sequence prefill cache into lane ``slot`` (the
+    lane-isolated special case of :func:`scatter_cache_lanes`)."""
+    del length  # the full lane is overwritten; garbage can't survive
+    return scatter_cache_lanes(
+        batched_cache, one_cache, jnp.asarray([slot], jnp.int32)
+    )
 
 
 def model_gemms(cfg: ModelConfig, batch_tokens: int) -> List[Tuple[str, int, int, int]]:

@@ -211,7 +211,11 @@ def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules):
 
 
 def make_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules):
-    """decode(params, cache, tokens, pos) -> (logits, cache)."""
+    """decode(params, cache, tokens, pos) -> (logits, cache).
+
+    ``pos`` is the per-slot position vector (B,), sharded like the token
+    batch -- each lane decodes (and writes its KV) at its own position.
+    """
     api = model_api.get_api(cfg)
 
     def decode(params, cache, tokens, pos):
@@ -226,7 +230,10 @@ def make_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules):
         mesh,
         resolve_spec(("batch", None), mesh, rules, dims=(shape.global_batch, 1)),
     )
-    pos_shard = _named(mesh, P())
+    pos_shard = _named(
+        mesh,
+        resolve_spec(("batch",), mesh, rules, dims=(shape.global_batch,)),
+    )
     logits_shard = _named(
         mesh,
         resolve_spec(
