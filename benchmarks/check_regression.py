@@ -28,7 +28,10 @@ Gates:
   decode tokens/s >= 1.5x the legacy host-loop engine per config, zero
   jit retraces after warmup under mixed-length traffic, and greedy token
   streams bit-identical to the host loop on the dense (bit-gated)
-  configs.
+  configs.  The ``pipeline_decode`` record gates true per-stage decode:
+  the K=2 --multi-pu engine's greedy streams bit-identical to the
+  single-PU device loop, >= 2 stages, the executed virtual clock
+  matching the plan recurrence, zero retraces after warmup.
 
 Exit code 1 on any regression, with one line per violation.
 """
@@ -204,6 +207,33 @@ def check_serve(cand: dict, errors: list[str]) -> None:
             )
     if "ttft_poisson" not in cand:
         errors.append("serve: ttft_poisson record missing")
+    pd = cand.get("pipeline_decode")
+    if pd is None:
+        errors.append(
+            "serve: pipeline_decode record missing (true per-stage "
+            "decode -- run `benchmarks.run --only serve`)"
+        )
+    else:
+        if not pd.get("greedy_bit_identical"):
+            errors.append(
+                "serve/pipeline_decode: staged --multi-pu greedy stream "
+                "diverged from the single-PU device loop"
+            )
+        if pd.get("stages", 0) < 2:
+            errors.append(
+                f"serve/pipeline_decode: {pd.get('stages')} stage(s) -- "
+                "the partition did not pipeline"
+            )
+        if not pd.get("clock_ok", False):
+            errors.append(
+                "serve/pipeline_decode: executed virtual clock diverged "
+                "from the plan's pipeline recurrence"
+            )
+        if pd.get("retraces_after_warmup", -1) != 0:
+            errors.append(
+                f"serve/pipeline_decode: {pd.get('retraces_after_warmup')} "
+                "retraces after warmup (ceiling is 0)"
+            )
 
 
 def main() -> int:

@@ -647,7 +647,11 @@ def bench_serve_suite(fast: bool):
     (DESIGN.md SS7): identical mixed-length traffic through both engines
     per model config, recording decode throughput, the jit trace deltas
     after warmup, greedy stream bit-identity, per-bucket prefill latency,
-    and TTFT percentiles under a Poisson arrival trace.  Emits
+    and TTFT percentiles under a Poisson arrival trace; plus the
+    ``pipeline_decode`` record -- a K=2 --multi-pu engine serving the
+    same traffic through true per-stage decode, gated on greedy
+    bit-identity with the single-PU device loop and on the executor's
+    virtual clock reproducing the plan recurrence.  Emits
     BENCH_serve.json at the repo root; CI gates on the >=1.5x speedup
     floor, a zero-retrace ceiling after warmup, and bit-identity on the
     dense configs (MoE capacity coupling legitimately perturbs logits
@@ -747,7 +751,8 @@ def bench_serve_suite(fast: bool):
 
     def run():
         records["configs"].clear()
-        for arch in archs:
+        olmo_device = None             # (params, streams, tps) for the
+        for arch in archs:             # pipeline_decode comparison below
             cfg = smoke_variant(get_config(arch))
             api = model_api.get_api(cfg)
             params = api.init_params(cfg, jax.random.PRNGKey(0))
@@ -756,6 +761,8 @@ def bench_serve_suite(fast: bool):
             host_tps, host_wall, host_streams, _ = run_one(host, prompts)
             dev = mk_engine(cfg, params, host=False)
             dev_tps, dev_wall, dev_streams, retr = run_one(dev, prompts)
+            if arch == "olmo-1b":
+                olmo_device = (params, dev_streams, dev_tps)
             host_dec = decode_phase_rate(cfg, params, host=True)
             dev_dec = decode_phase_rate(cfg, params, host=False)
             rec = {
@@ -780,6 +787,42 @@ def bench_serve_suite(fast: bool):
                 "prefill_traces_total": dev.trace_counts["prefill"],
             }
             records["configs"][arch] = rec
+
+        # true per-stage decode (--multi-pu): K=2 serving rounds run each
+        # stage's model-layer slice through the stage pipeline with real
+        # activation handoffs; greedy streams must stay bit-identical to
+        # the single-PU device loop and the executor's virtual clock must
+        # keep reproducing the plan recurrence (both CI-gated)
+        from repro.core.pu import host_offload_config, tpu_v5e_config
+
+        cfg = smoke_variant(get_config("olmo-1b"))
+        assert olmo_device is not None, "olmo-1b left the arch list"
+        params, dev_streams, dev_tps = olmo_device
+        staged = ServingEngine(
+            cfg, params,
+            ServeConfig(
+                max_batch=4, max_len=96, max_new_tokens=max_new,
+                stream_pus=[host_offload_config(), tpu_v5e_config()],
+            ),
+        )
+        prompts = traffic(cfg)
+        st_tps, st_wall, st_streams, st_retr = run_one(staged, prompts)
+        st = staged.stats()
+        records["pipeline_decode"] = {
+            "arch": "olmo-1b",
+            "stages": int(st["partition_stages"]),
+            "stage_decode_rounds": st["stage_decode_rounds"],
+            "stage_layers": [
+                int(st[k]) for k in sorted(st) if k.endswith("_decode_layers")
+            ],
+            "clock_ok": bool(st["stage_decode_clock_ok"]),
+            "greedy_bit_identical": st_streams == dev_streams,
+            "tokens_per_s": st_tps,
+            "single_pu_tokens_per_s": dev_tps,
+            "vs_single_pu": st_tps / dev_tps,
+            "retraces_after_warmup": sum(st_retr.values()),
+            "wall_s": st_wall,
+        }
 
         # TTFT under a Poisson arrival trace (device engine, olmo):
         # requests arrive on the open-loop clock; the engine keeps fusing

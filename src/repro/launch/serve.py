@@ -68,8 +68,15 @@ def main() -> int:
                     help="plan weight streaming (two-phase scheduler)")
     ap.add_argument("--multi-pu", type=int, default=0, metavar="K",
                     help="partition the model across K PU profiles "
-                         "(alternating host-offload / v5e); K=1 falls "
-                         "back to the single-PU streaming path")
+                         "(alternating host-offload / v5e) and run true "
+                         "per-stage decode: every serving round streams "
+                         "each stage's model-layer slice through the "
+                         "stage pipeline; K=1 falls back to the "
+                         "single-PU streaming path")
+    ap.add_argument("--no-stage-decode", action="store_true",
+                    help="with --multi-pu, keep the fused single-PU "
+                         "decode loop and only attach the partition "
+                         "analytically (parity-debugging escape hatch)")
     ap.add_argument("--microbatches", type=int, default=0, metavar="M",
                     help="microbatch depth for the executed stage "
                          "pipeline with --multi-pu; 0 (default) "
@@ -120,6 +127,7 @@ def main() -> int:
             if args.multi_pu
             else None
         ),
+        stage_decode=not args.no_stage_decode,
         aimc=AIMCNoiseModel() if args.aimc else None,
         plan_search=(
             SearchConfig(

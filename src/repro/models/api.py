@@ -10,6 +10,15 @@
     init_cache(cfg, batch, max_len) -> cache
     cache_axes(cfg)       -> logical-axes pytree matching cache
 
+plus the layer-sliced decode surface consumed by the stage pipeline
+(``runtime.stage_decode``): ``slice_params`` / ``slice_cache`` carve a
+stage's weights and cache lanes for a contiguous layer range,
+``decode_embed`` / ``decode_stage`` / ``decode_unembed`` split one
+decode round across stages, and ``decode_slice_points`` declares the
+legal stage boundaries (hybrid: shared-block group boundaries only).
+``decode_step`` is exactly the one-stage composition of these, so the
+fused and staged paths share every per-layer op.
+
 ``make_inputs`` / ``abstract_inputs`` build concrete or ShapeDtypeStruct
 batches for any (config x assigned shape) cell -- the dry-run, smoke tests
 and launchers all share them.
@@ -36,6 +45,17 @@ class ModelAPI:
     decode_step: Callable      # pos: () shared or (B,) per-slot positions
     init_cache: Callable
     cache_axes: Callable
+    # --- layer-sliced decode (the stage pipeline's entry points) ----------
+    # decode_step decomposes as decode_embed (first stage) -> decode_stage
+    # per contiguous layer slice -> decode_unembed (last stage); every
+    # family implements decode_step as exactly that one-stage composition,
+    # so staged and fused serving share the per-layer math bit for bit.
+    slice_params: Callable     # (cfg, params, (start, stop)) -> stage params
+    slice_cache: Callable      # (cfg, cache, (start, stop)) -> stage cache
+    decode_embed: Callable     # (cfg, params, tokens, pos) -> hidden (B,1,D)
+    decode_stage: Callable     # (cfg, sp, hidden, stage_cache, pos)
+    decode_unembed: Callable   # (cfg, params, hidden) -> logits (B, V)
+    decode_slice_points: Callable  # (cfg) -> allowed stage boundaries
     # attention-backed families accept batch["lengths"] for bucketed
     # right-padded batched prefill (causal masking hides the pad tail);
     # recurrent families (ssm/hybrid) must see exact-length prompts --
@@ -57,11 +77,26 @@ def _encdec_prefill(cfg, params, batch):
     )
 
 
+def _reject_lengths(family: str, batch):
+    """Recurrent families must never see right-padded prompts: every
+    padded step would flow through the conv/SSD state, so silently
+    dropping a caller's ``lengths`` would serve corrupted prefills."""
+    if batch.get("lengths") is not None:
+        raise ValueError(
+            f"{family} family does not support bucketed prefill: "
+            "batch['lengths'] implies right-padded prompts, and padded "
+            "steps would flow through the recurrent conv/SSD state "
+            "(submit exact-length prompts instead)"
+        )
+
+
 def _hybrid_prefill(cfg, params, batch):
+    _reject_lengths("hybrid", batch)
     return hybrid.prefill(cfg, params, batch["tokens"])
 
 
 def _ssm_prefill(cfg, params, batch):
+    _reject_lengths("ssm", batch)
     return ssm_lm.prefill(cfg, params, batch["tokens"])
 
 
@@ -74,6 +109,12 @@ _TRANSFORMER_API = ModelAPI(
     decode_step=transformer.decode_step,
     init_cache=transformer.init_cache,
     cache_axes=transformer.cache_axes,
+    slice_params=transformer.slice_params,
+    slice_cache=transformer.slice_cache,
+    decode_embed=transformer.decode_embed,
+    decode_stage=transformer.decode_stage,
+    decode_unembed=transformer.decode_unembed,
+    decode_slice_points=transformer.decode_slice_points,
     supports_bucketed_prefill=True,
 )
 
@@ -92,6 +133,12 @@ def get_api(cfg: ModelConfig) -> ModelAPI:
             decode_step=ssm_lm.decode_step,
             init_cache=ssm_lm.init_cache,
             cache_axes=ssm_lm.cache_axes,
+            slice_params=ssm_lm.slice_params,
+            slice_cache=ssm_lm.slice_cache,
+            decode_embed=ssm_lm.decode_embed,
+            decode_stage=ssm_lm.decode_stage,
+            decode_unembed=ssm_lm.decode_unembed,
+            decode_slice_points=ssm_lm.decode_slice_points,
         )
     if fam == "hybrid":
         return ModelAPI(
@@ -103,6 +150,12 @@ def get_api(cfg: ModelConfig) -> ModelAPI:
             decode_step=hybrid.decode_step,
             init_cache=hybrid.init_cache,
             cache_axes=hybrid.cache_axes,
+            slice_params=hybrid.slice_params,
+            slice_cache=hybrid.slice_cache,
+            decode_embed=hybrid.decode_embed,
+            decode_stage=hybrid.decode_stage,
+            decode_unembed=hybrid.decode_unembed,
+            decode_slice_points=hybrid.decode_slice_points,
         )
     if fam == "encdec":
         return ModelAPI(
@@ -114,6 +167,12 @@ def get_api(cfg: ModelConfig) -> ModelAPI:
             decode_step=encdec.decode_step,
             init_cache=encdec.init_cache,
             cache_axes=encdec.cache_axes,
+            slice_params=encdec.slice_params,
+            slice_cache=encdec.slice_cache,
+            decode_embed=encdec.decode_embed,
+            decode_stage=encdec.decode_stage,
+            decode_unembed=encdec.decode_unembed,
+            decode_slice_points=encdec.decode_slice_points,
             supports_bucketed_prefill=True,
         )
     raise ValueError(f"unknown family {fam}")

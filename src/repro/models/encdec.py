@@ -266,14 +266,49 @@ def prefill(
     return logits, {"self_k": sk, "self_v": sv, "cross_k": crk, "cross_v": crv}
 
 
-def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array, pos: jax.Array):
-    b = tokens.shape[0]
+# -------------------------------------------------- layer-sliced decode ---
+
+
+def _decode_positions(pos, b):
     pos = jnp.asarray(pos, jnp.int32)
     positions = (
         jnp.broadcast_to(pos, (b, 1)) if pos.ndim == 0 else pos[:, None]
     ).astype(jnp.int32)
+    return pos, positions
+
+
+def decode_slice_points(cfg: ModelConfig) -> Tuple[int, ...]:
+    """Decoder-layer indices where a stage boundary may fall."""
+    return tuple(range(cfg.n_layers + 1))
+
+
+def slice_params(cfg: ModelConfig, params: dict, layer_range) -> dict:
+    start, stop = layer_range
+    return {
+        "dec_layers": jax.tree.map(
+            lambda a: a[start:stop], params["dec_layers"]
+        ),
+    }
+
+
+def slice_cache(cfg: ModelConfig, cache, layer_range):
+    start, stop = layer_range
+    return jax.tree.map(lambda a: a[start:stop], cache)
+
+
+def decode_embed(cfg: ModelConfig, params: dict, tokens: jax.Array, pos: jax.Array) -> jax.Array:
+    _, positions = _decode_positions(pos, tokens.shape[0])
     x = params["embed"].astype(_dtype(cfg))[tokens]
-    x = x + params["dec_pos"].astype(x.dtype)[positions]
+    return x + params["dec_pos"].astype(x.dtype)[positions]
+
+
+def decode_stage(cfg: ModelConfig, stage_params: dict, hidden: jax.Array, stage_cache: dict, pos: jax.Array):
+    """One token step through decoder layers [start, stop): self-attention
+    against the stage's KV slice, cross-attention against its cached
+    encoder projections.  Empty slices are the identity."""
+    if jax.tree.leaves(stage_params["dec_layers"])[0].shape[0] == 0:
+        return hidden, stage_cache
+    pos, positions = _decode_positions(pos, hidden.shape[0])
 
     def body(x, xs):
         lp, sk, sv, ck, cv = xs
@@ -284,13 +319,25 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array, 
         return x, (new_cache[0], new_cache[1])
 
     x, (sk, sv) = jax.lax.scan(
-        body, x,
-        (params["dec_layers"], cache["self_k"], cache["self_v"],
-         cache["cross_k"], cache["cross_v"]),
+        body, hidden,
+        (stage_params["dec_layers"], stage_cache["self_k"],
+         stage_cache["self_v"], stage_cache["cross_k"],
+         stage_cache["cross_v"]),
     )
-    x = apply_norm(cfg, x, params.get("dec_norm"))
-    logits = (x[:, -1] @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
-    return logits, {
+    return x, {
         "self_k": sk, "self_v": sv,
-        "cross_k": cache["cross_k"], "cross_v": cache["cross_v"],
+        "cross_k": stage_cache["cross_k"], "cross_v": stage_cache["cross_v"],
     }
+
+
+def decode_unembed(cfg: ModelConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    x = apply_norm(cfg, hidden, params.get("dec_norm"))
+    return (x[:, -1] @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array, pos: jax.Array):
+    x = decode_embed(cfg, params, tokens, pos)
+    x, new_cache = decode_stage(
+        cfg, slice_params(cfg, params, (0, cfg.n_layers)), x, cache, pos
+    )
+    return decode_unembed(cfg, params, x), new_cache

@@ -275,64 +275,150 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array):
     return logits, new_cache
 
 
-def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array, pos: jax.Array):
-    b = tokens.shape[0]
+# -------------------------------------------------- layer-sliced decode ---
+# A stage boundary may only fall on a *group* boundary: the shared
+# attention block runs immediately before mamba layer g*every, so cutting
+# mid-group would strand a group's KV cache on one stage and its mamba
+# layers on another.  The tail (layers past the last group) rides with
+# whichever stage owns the final boundary.
+
+
+def decode_slice_points(cfg: ModelConfig) -> Tuple[int, ...]:
     n_groups, tail = _groups(cfg)
+    every = cfg.hybrid_attn_every
+    pts = list(range(0, n_groups * every + 1, every))
+    if tail:
+        pts.append(cfg.n_layers)
+    return tuple(pts)
+
+
+def _group_range(cfg: ModelConfig, start: int, stop: int) -> Tuple[int, int]:
+    n_groups, _ = _groups(cfg)
+    every = cfg.hybrid_attn_every
+    if start not in decode_slice_points(cfg) or stop not in decode_slice_points(cfg):
+        raise ValueError(
+            f"hybrid layer range ({start}, {stop}) is not group-aligned; "
+            f"valid slice points: {decode_slice_points(cfg)}"
+        )
+    g0 = min(start, n_groups * every) // every
+    g1 = min(stop, n_groups * every) // every
+    return g0, g1
+
+
+def slice_params(cfg: ModelConfig, params: dict, layer_range) -> dict:
+    """Stage-local decode params for mamba layers [start, stop).
+
+    The shared attention block's weights are *replicated* into every
+    stage whose range contains a group boundary (weight sharing is the
+    architecture; the stage pipeline pays its residency per stage)."""
+    start, stop = layer_range
+    _group_range(cfg, start, stop)   # validates alignment
+    flat = _mamba_param_slices(cfg, params)
+    return {
+        "shared": params["shared"],
+        "mamba": jax.tree.map(lambda a: a[start:stop], flat),
+    }
+
+
+def slice_cache(cfg: ModelConfig, cache, layer_range):
+    start, stop = layer_range
+    g0, g1 = _group_range(cfg, start, stop)
+    return {
+        "attn_k": cache["attn_k"][g0:g1],
+        "attn_v": cache["attn_v"][g0:g1],
+        "conv": cache["conv"][start:stop],
+        "ssm": cache["ssm"][start:stop],
+    }
+
+
+def decode_embed(cfg: ModelConfig, params: dict, tokens: jax.Array, pos: jax.Array) -> jax.Array:
+    del pos
+    return params["embed"].astype(_dtype(cfg))[tokens]
+
+
+def decode_stage(cfg: ModelConfig, stage_params: dict, hidden: jax.Array, stage_cache: dict, pos: jax.Array):
+    """One token step through a group-aligned slice.  The slice's group
+    structure is recovered from the cache shapes: the first
+    ``n_groups_local * every`` mamba layers are grouped (each group led
+    by the shared attention block over its KV lane), the remainder is
+    tail."""
+    b = hidden.shape[0]
     every = cfg.hybrid_attn_every
     pos = jnp.asarray(pos, jnp.int32)
     positions = (
         jnp.broadcast_to(pos, (b, 1)) if pos.ndim == 0 else pos[:, None]
     ).astype(jnp.int32)
-    x = params["embed"].astype(_dtype(cfg))[tokens]
-    mamba_flat = _mamba_param_slices(cfg, params)
+    n_g = stage_cache["attn_k"].shape[0]
+    n_m = stage_cache["conv"].shape[0]
+    mamba = stage_params["mamba"]
+    x = hidden
 
-    group_mamba = jax.tree.map(
-        lambda a: a[: n_groups * every].reshape((n_groups, every) + a.shape[1:]),
-        mamba_flat,
-    )
+    def mamba_fn(carry, inner):
+        lp, cst, sst = inner
+        h = apply_norm(cfg, carry, lp.get("norm"))
+        y, new_state = ssm_mod.ssm_decode_step(cfg, lp["ssm"], h, (cst, sst))
+        return carry + y, new_state
 
-    def group_fn(x, xs):
-        gp, kc, vc, conv_st, ssm_st = xs
-        x, kv = _shared_block(
-            cfg, params["shared"], x, positions, cache_kv=(kc, vc), decode_pos=pos
+    if n_g:
+        group_mamba = jax.tree.map(
+            lambda a: a[: n_g * every].reshape((n_g, every) + a.shape[1:]),
+            mamba,
+        )
+        conv_groups = stage_cache["conv"][: n_g * every].reshape(
+            (n_g, every) + stage_cache["conv"].shape[1:]
+        )
+        ssm_groups = stage_cache["ssm"][: n_g * every].reshape(
+            (n_g, every) + stage_cache["ssm"].shape[1:]
         )
 
-        def mamba_fn(carry, inner):
-            lp, cst, sst = inner
-            h = apply_norm(cfg, carry, lp.get("norm"))
-            y, new_state = ssm_mod.ssm_decode_step(cfg, lp["ssm"], h, (cst, sst))
-            return carry + y, new_state
+        def group_fn(x, xs):
+            gp, kc, vc, conv_st, ssm_st = xs
+            x, kv = _shared_block(
+                cfg, stage_params["shared"], x, positions,
+                cache_kv=(kc, vc), decode_pos=pos,
+            )
+            x, (new_conv, new_ssm) = jax.lax.scan(
+                mamba_fn, x, (gp, conv_st, ssm_st)
+            )
+            return x, (kv[0], kv[1], new_conv, new_ssm)
 
-        x, (new_conv, new_ssm) = jax.lax.scan(mamba_fn, x, (gp, conv_st, ssm_st))
-        return x, (kv[0], kv[1], new_conv, new_ssm)
+        x, (ks, vs, convs, ssms) = jax.lax.scan(
+            group_fn, x,
+            (group_mamba, stage_cache["attn_k"], stage_cache["attn_v"],
+             conv_groups, ssm_groups),
+        )
+        new_conv = convs.reshape((-1,) + convs.shape[2:])
+        new_ssm = ssms.reshape((-1,) + ssms.shape[2:])
+        ks_out, vs_out = ks, vs
+    else:
+        ks_out, vs_out = stage_cache["attn_k"], stage_cache["attn_v"]
+        new_conv = stage_cache["conv"][:0]
+        new_ssm = stage_cache["ssm"][:0]
 
-    conv_groups = cache["conv"][: n_groups * every].reshape(
-        (n_groups, every) + cache["conv"].shape[1:]
-    )
-    ssm_groups = cache["ssm"][: n_groups * every].reshape(
-        (n_groups, every) + cache["ssm"].shape[1:]
-    )
-    x, (ks, vs, convs, ssms) = jax.lax.scan(
-        group_fn, x, (group_mamba, cache["attn_k"], cache["attn_v"], conv_groups, ssm_groups)
-    )
-    new_conv = convs.reshape((-1,) + convs.shape[2:])
-    new_ssm = ssms.reshape((-1,) + ssms.shape[2:])
-    if tail:
-        tail_params = jax.tree.map(lambda a: a[n_groups * every :], mamba_flat)
-
-        def mamba_fn(carry, inner):
-            lp, cst, sst = inner
-            h = apply_norm(cfg, carry, lp.get("norm"))
-            y, new_state = ssm_mod.ssm_decode_step(cfg, lp["ssm"], h, (cst, sst))
-            return carry + y, new_state
-
+    n_tail = n_m - n_g * every
+    if n_tail:
+        tail_params = jax.tree.map(lambda a: a[n_g * every :], mamba)
         x, (tconv, tssm) = jax.lax.scan(
             mamba_fn, x,
-            (tail_params, cache["conv"][n_groups * every :], cache["ssm"][n_groups * every :]),
+            (tail_params, stage_cache["conv"][n_g * every :],
+             stage_cache["ssm"][n_g * every :]),
         )
         new_conv = jnp.concatenate([new_conv, tconv], axis=0)
         new_ssm = jnp.concatenate([new_ssm, tssm], axis=0)
-    x = apply_norm(cfg, x, params.get("final_norm"))
-    logits = (x[:, -1] @ _unembed_matrix(cfg, params).astype(x.dtype)).astype(jnp.float32)
-    new_cache = {"attn_k": ks, "attn_v": vs, "conv": new_conv, "ssm": new_ssm}
-    return logits, new_cache
+    return x, {
+        "attn_k": ks_out, "attn_v": vs_out,
+        "conv": new_conv, "ssm": new_ssm,
+    }
+
+
+def decode_unembed(cfg: ModelConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    x = apply_norm(cfg, hidden, params.get("final_norm"))
+    return (x[:, -1] @ _unembed_matrix(cfg, params).astype(x.dtype)).astype(jnp.float32)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array, pos: jax.Array):
+    x = decode_embed(cfg, params, tokens, pos)
+    x, new_cache = decode_stage(
+        cfg, slice_params(cfg, params, (0, cfg.n_layers)), x, cache, pos
+    )
+    return decode_unembed(cfg, params, x), new_cache

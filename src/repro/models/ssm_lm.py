@@ -120,9 +120,33 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array):
     return logits, {"conv": convs.astype(_dtype(cfg)), "ssm": ssms}
 
 
-def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array, pos: jax.Array):
+# -------------------------------------------------- layer-sliced decode ---
+
+
+def decode_slice_points(cfg: ModelConfig):
+    """SSM layers are independent states: any boundary is valid."""
+    return tuple(range(cfg.n_layers + 1))
+
+
+def slice_params(cfg: ModelConfig, params: dict, layer_range) -> dict:
+    start, stop = layer_range
+    return {"layers": jax.tree.map(lambda a: a[start:stop], params["layers"])}
+
+
+def slice_cache(cfg: ModelConfig, cache, layer_range):
+    start, stop = layer_range
+    return jax.tree.map(lambda a: a[start:stop], cache)
+
+
+def decode_embed(cfg: ModelConfig, params: dict, tokens: jax.Array, pos: jax.Array) -> jax.Array:
     del pos  # SSM state is position-free
-    x = params["embed"].astype(_dtype(cfg))[tokens]
+    return params["embed"].astype(_dtype(cfg))[tokens]
+
+
+def decode_stage(cfg: ModelConfig, stage_params: dict, hidden: jax.Array, stage_cache: dict, pos: jax.Array):
+    del pos
+    if jax.tree.leaves(stage_params["layers"])[0].shape[0] == 0:
+        return hidden, stage_cache
 
     def body(x, xs):
         lp, cst, sst = xs
@@ -130,7 +154,21 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array, 
         y, st = ssm_mod.ssm_decode_step(cfg, lp["ssm"], h, (cst, sst))
         return x + y, st
 
-    x, (convs, ssms) = jax.lax.scan(body, x, (params["layers"], cache["conv"], cache["ssm"]))
-    x = apply_norm(cfg, x, params.get("final_norm"))
-    logits = (x[:, -1] @ _unembed_matrix(cfg, params).astype(x.dtype)).astype(jnp.float32)
-    return logits, {"conv": convs, "ssm": ssms}
+    x, (convs, ssms) = jax.lax.scan(
+        body, hidden,
+        (stage_params["layers"], stage_cache["conv"], stage_cache["ssm"]),
+    )
+    return x, {"conv": convs, "ssm": ssms}
+
+
+def decode_unembed(cfg: ModelConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    x = apply_norm(cfg, hidden, params.get("final_norm"))
+    return (x[:, -1] @ _unembed_matrix(cfg, params).astype(x.dtype)).astype(jnp.float32)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: jax.Array, pos: jax.Array):
+    x = decode_embed(cfg, params, tokens, pos)
+    x, new_cache = decode_stage(
+        cfg, slice_params(cfg, params, (0, cfg.n_layers)), x, cache, pos
+    )
+    return decode_unembed(cfg, params, x), new_cache

@@ -394,22 +394,64 @@ def cache_axes(cfg: ModelConfig):
     return (ax, ax)
 
 
-def decode_step(
-    cfg: ModelConfig,
-    params: dict,
-    cache: Tuple[jax.Array, jax.Array],
-    tokens: jax.Array,               # (B, 1)
-    pos: jax.Array,                  # () or (B,) int32 -- write position
-                                     # (per-lane when slots are staggered)
-) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
-    """One token step against a KV cache -> (logits (B,V), new cache)."""
-    b = tokens.shape[0]
+# -------------------------------------------------- layer-sliced decode ---
+# The stage pipeline (runtime.stage_decode) runs each pipeline stage's
+# contiguous layer range on its own submesh: decode_step decomposes into
+# decode_embed (first stage) -> decode_stage per layer slice -> decode_unembed
+# (last stage), and the fused single-PU loop is exactly the one-stage
+# composition, so staged and fused serving share every per-layer op.
+
+
+def _decode_positions(pos: jax.Array, b: int) -> Tuple[jax.Array, jax.Array]:
+    """Normalize pos to (int32 pos, (B, 1) positions) for one-token decode."""
     pos = jnp.asarray(pos, jnp.int32)
     positions = (
         jnp.broadcast_to(pos, (b, 1)) if pos.ndim == 0 else pos[:, None]
     ).astype(jnp.int32)
-    x = _embed(cfg, params, tokens, None, positions)
-    windows = layer_windows(cfg)
+    return pos, positions
+
+
+def decode_slice_points(cfg: ModelConfig) -> Tuple[int, ...]:
+    """Layer indices where a stage boundary may fall (every layer)."""
+    return tuple(range(cfg.n_layers + 1))
+
+
+def slice_params(cfg: ModelConfig, params: dict, layer_range) -> dict:
+    """Stage-local decode params for layers [start, stop)."""
+    start, stop = layer_range
+    return {
+        "layers": jax.tree.map(lambda a: a[start:stop], params["layers"]),
+        "windows": layer_windows(cfg)[start:stop],
+    }
+
+
+def slice_cache(cfg: ModelConfig, cache, layer_range):
+    """Stage-local KV cache lanes for layers [start, stop)."""
+    start, stop = layer_range
+    return jax.tree.map(lambda a: a[start:stop], cache)
+
+
+def decode_embed(cfg: ModelConfig, params: dict, tokens: jax.Array, pos: jax.Array) -> jax.Array:
+    """First-stage half of the embed/unembed split: token -> hidden (B, 1, D)."""
+    _, positions = _decode_positions(pos, tokens.shape[0])
+    return _embed(cfg, params, tokens, None, positions)
+
+
+def decode_stage(
+    cfg: ModelConfig,
+    stage_params: dict,
+    hidden: jax.Array,               # (B, 1, D)
+    stage_cache,
+    pos: jax.Array,                  # () or (B,) int32 -- write position
+):
+    """One token step through a contiguous layer slice -> (hidden, cache).
+
+    ``stage_params``/``stage_cache`` come from :func:`slice_params` /
+    :func:`slice_cache`; an empty slice is the identity (the hidden state
+    passes through untouched)."""
+    if stage_params["layers"] and jax.tree.leaves(stage_params["layers"])[0].shape[0] == 0:
+        return hidden, stage_cache
+    pos, positions = _decode_positions(pos, hidden.shape[0])
 
     def body(x, xs):
         lp, win = xs[0], xs[1]
@@ -419,7 +461,32 @@ def decode_step(
         return x, new_cache
 
     x, new_cache = jax.lax.scan(
-        body, x, (params["layers"], windows) + tuple(cache)
+        body, hidden,
+        (stage_params["layers"], stage_params["windows"]) + tuple(stage_cache),
     )
-    x = apply_norm(cfg, x, params.get("final_norm"))
-    return logits_last(cfg, params, x), tuple(new_cache)
+    return x, tuple(new_cache)
+
+
+def decode_unembed(cfg: ModelConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    """Last-stage half of the split: hidden (B, 1, D) -> logits (B, V)."""
+    x = apply_norm(cfg, hidden, params.get("final_norm"))
+    return logits_last(cfg, params, x)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    cache: Tuple[jax.Array, jax.Array],
+    tokens: jax.Array,               # (B, 1)
+    pos: jax.Array,                  # () or (B,) int32 -- write position
+                                     # (per-lane when slots are staggered)
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One token step against a KV cache -> (logits (B,V), new cache).
+
+    Exactly the one-stage composition of the sliced entry points, so the
+    fused loop and the stage pipeline run identical per-layer math."""
+    x = decode_embed(cfg, params, tokens, pos)
+    x, new_cache = decode_stage(
+        cfg, slice_params(cfg, params, (0, cfg.n_layers)), x, cache, pos
+    )
+    return decode_unembed(cfg, params, x), new_cache

@@ -52,6 +52,22 @@ class StagePlan:
     tiles_per_layer: Tuple[int, ...] = ()  # tile count per local layer
     handoff_in_bytes: int = 0        # activation bytes entering the stage
     handoff_in_s: float = 0.0        # inbound transfer time per frame
+    # model-layer range the stage's *decode slice* covers (what the model
+    # slicers consume -- distinct from layer_start/stop, which index the
+    # schedulable unit sequence, e.g. GEMMs).  -1 until a model-aware
+    # planner (serving.plan_partitioned_streaming) attaches it, snapped
+    # to the family's allowed slice points.
+    decode_layer_start: int = -1
+    decode_layer_stop: int = -1
+
+    @property
+    def decode_layers(self) -> Tuple[int, int]:
+        if self.decode_layer_start < 0:
+            raise ValueError(
+                "stage has no decode layer range attached (plan was built "
+                "from a raw unit sequence, not via a model-aware planner)"
+            )
+        return (self.decode_layer_start, self.decode_layer_stop)
 
     @property
     def stage_s(self) -> float:
@@ -148,6 +164,11 @@ class PartitionedPlan:
                     "tiles": s.plan.n,
                     "handoff_in_bytes": s.handoff_in_bytes,
                     "handoff_in_s": s.handoff_in_s,
+                    "decode_layers": (
+                        [s.decode_layer_start, s.decode_layer_stop]
+                        if s.decode_layer_start >= 0
+                        else None
+                    ),
                 }
                 for s in self.stages
             ],

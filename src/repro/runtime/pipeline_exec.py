@@ -20,6 +20,14 @@ the plan a runnable artifact:
   ``parallel/pipeline.py`` implements with shard_map -- and the same
   ``bubble_fraction`` model is used to cross-check the *measured*
   fill/drain bubble against the analytic prediction.
+- **Real stage compute** (``run_stage``): with a per-stage callback the
+  handoff queues carry live ``(B, 1, d_model)`` hidden-state tensors --
+  each stage folds its model-layer slice over the inbound activations
+  (``runtime.stage_decode`` wires ``ModelAPI.decode_stage`` here) and
+  ``stage_meshes`` ``jax.device_put``s the payload onto the consuming
+  stage's submesh at every handoff.  The tile loop still runs, so the
+  streaming/residency account and the virtual clock remain the
+  cross-check against the analytic recurrence.
 
 Timing: compute in this CPU container is functional, so throughput is
 accounted in *virtual time* derived from the executed event stream --
@@ -52,6 +60,28 @@ from repro.plan.partition import PartitionedPlan, StagePlan
 FetchFn = Callable[[int, int, str], Any]
 # run_tile(stage, tile_index, weights, carry) -> carry
 RunTileFn = Callable[[int, int, Any, Any], Any]
+# run_stage(stage, carry) -> carry: one real compute step over the whole
+# stage (e.g. a layer-sliced decode_stage on device); applied after the
+# tile acquire/release loop so the streaming/residency account still runs
+RunStageFn = Callable[[int, Any], Any]
+
+
+def _place_on_mesh(payload, mesh):
+    """``jax.device_put`` every jax array leaf of ``payload`` onto
+    ``mesh`` (replicated within the stage submesh) -- the inter-stage
+    handoff that moves activations onto the consuming stage's devices.
+    Non-array payloads (the functional-tile bench path) pass through."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    sharding = NamedSharding(mesh, PartitionSpec())
+
+    def put(leaf):
+        if isinstance(leaf, jax.Array):
+            return jax.device_put(leaf, sharding)
+        return leaf
+
+    return jax.tree.map(put, payload)
 
 
 @dataclasses.dataclass
@@ -90,6 +120,9 @@ class PipelineReport:
     wall_s: float                  # real wall time of the threaded run
     max_concurrent_stages: int     # observed stages simultaneously mid-frame
     stages: List[StageTrace]
+    # True when a run_stage callback executed real per-frame compute (the
+    # handoff queues carried live activations, not functional stand-ins)
+    real_stage_compute: bool = False
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -132,6 +165,8 @@ class StagePipelineExecutor:
         *,
         fetch: Optional[FetchFn] = None,
         run_tile: Optional[RunTileFn] = None,
+        run_stage: Optional[RunStageFn] = None,
+        stage_meshes: Optional[Sequence[Any]] = None,
         queue_depth: int = 2,
         record_fetch_orders: bool = False,
     ):
@@ -143,6 +178,21 @@ class StagePipelineExecutor:
         self.plan = plan
         self.fetch = fetch or (lambda k, i, name: name)
         self.run_tile = run_tile or (lambda k, i, w, carry: carry)
+        # run_stage carries the *real* per-frame compute: the handoff
+        # queues then move live activation tensors between stages while
+        # the tile loop keeps the streaming account (the virtual clock
+        # stays the cross-check against the analytic recurrence)
+        self.run_stage = run_stage
+        # one mesh per stage: payloads are device_put onto the consuming
+        # stage's submesh at handoff (None skips placement -- CPU bench)
+        self.stage_meshes = list(stage_meshes) if stage_meshes else None
+        if self.stage_meshes is not None and len(self.stage_meshes) != len(
+            plan.stages
+        ):
+            raise ValueError(
+                f"stage_meshes has {len(self.stage_meshes)} entries for "
+                f"{len(plan.stages)} stages"
+            )
         self.queue_depth = queue_depth
         self.record_fetch_orders = record_fetch_orders
         self._active_lock = threading.Lock()
@@ -200,6 +250,8 @@ class StagePipelineExecutor:
             if errors:
                 continue    # some stage failed: drain upstream, don't work
             frame, payload, ready_t = item
+            if k == 0 and self.stage_meshes is not None:
+                payload = _place_on_mesh(payload, self.stage_meshes[0])
             self._enter_frame()
             # inbound handoff: the activation transfer overlaps the
             # previous frame's compute (DMA), so it delays *arrival*,
@@ -227,6 +279,15 @@ class StagePipelineExecutor:
                     w = core.acquire(i)
                     carry = self.run_tile(k, i, w, carry)
                     core.release(i)
+                if self.run_stage is not None:
+                    # the real per-frame compute: fold the stage's layer
+                    # slice over the inbound activations
+                    carry = self.run_stage(k, carry)
+                if self.stage_meshes is not None and k + 1 < len(
+                    self.plan.stages
+                ):
+                    # hand the activations to the next stage's submesh
+                    carry = _place_on_mesh(carry, self.stage_meshes[k + 1])
             except BaseException as e:
                 core.abort(e)       # unblock this stage's prefetch worker
                 errors.append(e)
@@ -375,6 +436,7 @@ class StagePipelineExecutor:
             wall_s=wall_s,
             max_concurrent_stages=self._max_active if M else 0,
             stages=traces,
+            real_stage_compute=self.run_stage is not None,
         )
 
 

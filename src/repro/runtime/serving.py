@@ -32,6 +32,12 @@ only moves a handful of scalars per slot.  ``ServeConfig.host_sampling``
 keeps the legacy host-loop round (one decode jit per token, numpy
 sampling) as an escape hatch and as the reference for the greedy
 bit-identity property tests.
+
+With ``stream_pus`` (K >= 2) the engine runs **true per-stage decode**
+(DESIGN.md SS8): each round's hidden state flows through the stage
+pipeline, every stage executing its model-layer slice against its own
+KV-cache slice (``runtime.stage_decode``), with greedy streams
+bit-identical to the fused single-PU loop.
 """
 from __future__ import annotations
 
@@ -87,6 +93,11 @@ class ServeConfig:
     # (None/heuristic = the paper's one-shot heuristic; beam/anneal run
     # the richer search funded by the event-indexed engine)
     plan_search: Optional[SearchConfig] = None
+    # multi-PU decode rounds run each stage's *model layer slice* through
+    # the stage pipeline (true per-stage decode: real activations in the
+    # handoff queues, per-stage KV cache slices); False falls back to the
+    # fused single-PU decode loop with the partition kept analytic-only
+    stage_decode: bool = True
     # target fill/drain bubble fraction for the auto-tuned microbatch
     # depth when execute_partition() is called without an explicit M
     target_bubble: float = 0.10
@@ -224,6 +235,15 @@ class ServingEngine:
 
         self._admit_block = jax.jit(_admit_block, donate_argnums=(1, 2))
 
+        # per-round state transition for the staged (multi-PU) decode
+        # path: exactly the fused block's post-decode update, jitted
+        # standalone so the pipeline's logits feed the same bookkeeping
+        def _staged_update(state, logits):
+            self.trace_counts["decode"] += 1
+            return self._postdecode_update(state, logits)
+
+        self._staged_update = jax.jit(_staged_update)
+
         # --- paper machinery ------------------------------------------------
         self.streaming_plan: Optional[StreamingPlan] = None
         self.partitioned_plan: Optional[PartitionedPlan] = None
@@ -251,7 +271,29 @@ class ServingEngine:
                 self.stage_meshes, self.stage_meshes_shared = stage_submeshes(
                     mesh, len(self.partitioned_plan.stages)
                 )
-        elif serve_cfg.stream_pu is not None:
+        # true per-stage decode: multi-PU device-path rounds run each
+        # stage's model-layer slice through the stage pipeline, with
+        # per-stage KV cache slices and real activation handoffs
+        self._staged = None
+        self._staged_live = False
+        if (
+            self.partitioned_plan is not None
+            and serve_cfg.stage_decode
+            and not serve_cfg.host_sampling
+        ):
+            from repro.runtime.stage_decode import StagedDecodeRunner
+
+            def _count_trace(kind):
+                self.trace_counts[kind] = self.trace_counts.get(kind, 0) + 1
+
+            self._staged = StagedDecodeRunner(
+                cfg, self.api, params, self.partitioned_plan,
+                stage_meshes=(
+                    self.stage_meshes if not self.stage_meshes_shared else None
+                ),
+                on_trace=_count_trace,
+            )
+        if serve_cfg.stream_pu is not None and not serve_cfg.stream_pus:
             self.streaming_plan = plan_model_streaming(
                 cfg, serve_cfg.stream_pu,
                 batch_tokens=serve_cfg.max_batch,
@@ -263,9 +305,10 @@ class ServingEngine:
 
     # -- client API --------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: Optional[int] = None) -> int:
-        # a request can never generate past the cache: clamp the budget so
-        # at least one prompt token survives truncation (max_len - 2 keeps
-        # one prompt slot + the pos < max_len - 1 stop)
+        # a request can never generate past the cache: clamp the budget to
+        # max_len - 2 so at least two prompt tokens survive truncation
+        # (keep = max_len - budget, see _truncated_prompt) and the
+        # pos >= max_len - 1 stop can never cut a clamped budget short
         budget = max_new_tokens or self.serve_cfg.max_new_tokens
         req = Request(
             uid=self._uid,
@@ -323,6 +366,22 @@ class ServingEngine:
                         jnp.full((nb,), sc.max_batch, jnp.int32),  # dropped
                         jnp.ones((nb,), jnp.int32),
                     )
+        if self._staged is not None:
+            # staged decode has no pow2 ladder (one pipeline traversal
+            # per round): warm the per-stage cells and the state update
+            # on throwaway cache slices, then drop them.  The state is
+            # *kept* -- no lane is active, so the transition is the
+            # identity except for the PRNG key, which advances exactly
+            # like a live round (the warmup contract above)
+            self._staged.load_cache(self._cache)
+            logits = self._staged.decode_round(
+                self._state["tokens"], self._state["pos"]
+            )
+            self._state = self._staged_update(self._state, logits)
+            self._staged.stage_caches = None
+            self._staged_live = False
+            self._staged.rounds_executed = 0
+            return
         R = 1
         while R <= sc.max_decode_block:
             self._cache, self._state = self._decode_block(
@@ -359,6 +418,44 @@ class ServingEngine:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return key, tok
 
+    def _apply_eos(self, done, tok):
+        """Fold eos termination into ``done``.  The single definition of
+        "eos is enabled" for every path (host scalars and device
+        vectors): any non-negative ``eos_token`` -- including 0 -- is a
+        real stop token; only negative values disable the check."""
+        if self.serve_cfg.eos_token >= 0:
+            return done | (tok == self.serve_cfg.eos_token)
+        return done
+
+    def _postdecode_update(self, state, logits):
+        """Sample-append bookkeeping after one decode round's logits:
+        the single state transition shared by the fused device block and
+        the staged per-round loop, so both paths terminate, append, and
+        thread the PRNG identically."""
+        sc = self.serve_cfg
+        lane = jnp.arange(sc.max_batch)
+        key, tok = self._sample_device(state["key"], logits)
+        act = state["active"]
+        acti = act.astype(jnp.int32)
+        tok = jnp.where(act, tok, sc.pad_token)
+        # inactive lanes write at an out-of-bounds column -> dropped
+        col = jnp.where(act, state["out_len"], sc.max_len)
+        out_buf = state["out_buf"].at[lane, col].set(tok, mode="drop")
+        out_len = state["out_len"] + acti
+        pos = state["pos"] + acti
+        rem = state["remaining"] - acti
+        done = (rem <= 0) | (pos >= sc.max_len - 1)
+        done = self._apply_eos(done, tok)
+        return {
+            "tokens": tok[:, None],
+            "pos": pos,
+            "remaining": rem,
+            "active": act & ~done,
+            "out_buf": out_buf,
+            "out_len": out_len,
+            "key": key,
+        }
+
     def _prefill_batch(self, tokens, lengths=None):
         """Model-API prefill batch for ``tokens``, with the stub modality
         inputs each family expects (shared by both admission paths)."""
@@ -383,43 +480,36 @@ class ServingEngine:
         position/remaining bookkeeping and done flags all stay on device;
         generated tokens land in the device-side ``out_buf`` ring so the
         host only reads them at request completion."""
-        sc = self.serve_cfg
-        B = sc.max_batch
-        lane = jnp.arange(B)
 
         def one(carry, _):
             cache, st = carry
             logits, cache = self.api.decode_step(
                 self.cfg, params, cache, st["tokens"], st["pos"]
             )
-            key, tok = self._sample_device(st["key"], logits)
-            act = st["active"]
-            acti = act.astype(jnp.int32)
-            tok = jnp.where(act, tok, sc.pad_token)
-            # inactive lanes write at an out-of-bounds column -> dropped
-            col = jnp.where(act, st["out_len"], sc.max_len)
-            out_buf = st["out_buf"].at[lane, col].set(tok, mode="drop")
-            out_len = st["out_len"] + acti
-            pos = st["pos"] + acti
-            rem = st["remaining"] - acti
-            done = (rem <= 0) | (pos >= sc.max_len - 1)
-            if sc.eos_token >= 0:
-                done = done | (tok == sc.eos_token)
-            st = {
-                "tokens": tok[:, None],
-                "pos": pos,
-                "remaining": rem,
-                "active": act & ~done,
-                "out_buf": out_buf,
-                "out_len": out_len,
-                "key": key,
-            }
-            return (cache, st), None
+            return (cache, self._postdecode_update(st, logits)), None
 
         (cache, state), _ = jax.lax.scan(
             one, (cache, state), None, length=n_rounds
         )
         return cache, state
+
+    def _staged_decode_block(self, n_rounds: int):
+        """``n_rounds`` true per-stage decode rounds: each round's hidden
+        state flows through the stage pipeline (every stage running its
+        model-layer slice against its own KV cache slice on its submesh),
+        then the shared ``_postdecode_update`` transition applies -- so
+        greedy streams are bit-identical to the fused single-PU block."""
+        runner = self._staged
+        if runner.bound_params is not self.params:
+            runner.rebind(self.params)       # e.g. after an NIU refresh
+        if not self._staged_live:
+            runner.load_cache(self._cache)
+            self._staged_live = True
+        for _ in range(n_rounds):
+            logits = runner.decode_round(
+                self._state["tokens"], self._state["pos"]
+            )
+            self._state = self._staged_update(self._state, logits)
 
     def _admit_impl(self, params, cache, state, tokens, lengths, slots, max_new):
         """Batched prefill of one length bucket + on-device admission:
@@ -427,7 +517,6 @@ class ServingEngine:
         and the per-slot decode state in one jitted update.  Dummy rows
         (bucket padding) carry ``slots == max_batch`` and are dropped by
         the out-of-bounds scatter mode."""
-        sc = self.serve_cfg
         batch = self._prefill_batch(
             tokens, lengths if self.bucketed_prefill else None
         )
@@ -437,9 +526,7 @@ class ServingEngine:
         cache = scatter_cache_lanes(cache, one_cache, slots)
         # a request whose budget is one token (or whose first token is
         # eos) completes at admission: it never occupies a decode slot
-        done0 = max_new <= 1
-        if sc.eos_token >= 0:
-            done0 = done0 | (tok == sc.eos_token)
+        done0 = self._apply_eos(max_new <= 1, tok)
         state = {
             "tokens": state["tokens"].at[slots, 0].set(tok, mode="drop"),
             "pos": state["pos"].at[slots].set(lengths, mode="drop"),
@@ -460,8 +547,20 @@ class ServingEngine:
         return self._buckets[-1]
 
     def _truncated_prompt(self, req: Request) -> np.ndarray:
+        """Tail of the prompt that fits the KV budget alongside the
+        request's generation budget.
+
+        A prompt of length ``keep`` prefills slots [0, keep); decode
+        round r writes KV at ``keep + r`` and the engine stops after
+        ``max_new - 1`` rounds (the first token is sampled at admission)
+        or when ``pos`` reaches ``max_len - 1`` -- so the last KV write
+        lands at ``keep + max_new - 2`` and ``keep = max_len - max_new``
+        is exactly the largest safe context.  (The previous ``- 1``
+        reserved a slot no path ever wrote, silently dropping one prompt
+        token at the boundary -- caught by the length ``max_len - 1``
+        boundary test.)"""
         sc = self.serve_cfg
-        keep = max(1, sc.max_len - req.max_new_tokens - 1)
+        keep = max(1, sc.max_len - req.max_new_tokens)
         return req.prompt[-keep:]
 
     def _admit_device(self):
@@ -476,6 +575,12 @@ class ServingEngine:
             admits.append((free.pop(0), req, None))
         if not admits:
             return
+        if self._staged is not None and self._staged_live:
+            # admission scatters into the master cache: fold the staged
+            # runner's per-stage slices back first so no decode state is
+            # lost (re-sliced lazily at the next staged block)
+            self._cache = self._staged.export_cache()
+            self._staged_live = False
         groups: Dict[int, List[Tuple[int, Request, np.ndarray]]] = {}
         for slot, req, _ in admits:
             prompt = self._truncated_prompt(req)
@@ -550,9 +655,12 @@ class ServingEngine:
         r = min(remaining) if self._queue else max(remaining)
         r = max(1, min(r, cap))
         R = 1 << (r.bit_length() - 1)          # largest power of two <= r
-        self._cache, self._state = self._decode_block(
-            self.params, self._cache, self._state, R
-        )
+        if self._staged is not None:
+            self._staged_decode_block(R)
+        else:
+            self._cache, self._state = self._decode_block(
+                self.params, self._cache, self._state, R
+            )
         self.rounds += R
 
         active = np.asarray(self._state["active"])
@@ -621,10 +729,10 @@ class ServingEngine:
                 req.first_token_at = now
             self._slot_pos[i] += 1
             self._slot_remaining[i] -= 1
-            if (
+            if self._apply_eos(
                 self._slot_remaining[i] <= 0
-                or tok == sc.eos_token
-                or self._slot_pos[i] >= sc.max_len - 1
+                or self._slot_pos[i] >= sc.max_len - 1,
+                tok,
             ):
                 req.done_at = now
                 self.completed.append(req)
@@ -633,7 +741,6 @@ class ServingEngine:
 
     def _admit_host(self, slot: int, req: Request):
         """Prefill a request into one cache lane (lane-isolated)."""
-        sc = self.serve_cfg
         prompt = self._truncated_prompt(req)
         t0 = time.perf_counter()
         batch = self._prefill_batch(jnp.asarray(prompt[None, :], jnp.int32))
@@ -647,7 +754,7 @@ class ServingEngine:
         req.first_token_at = time.perf_counter()
         # a single-token budget (or an eos first token) completes at
         # admission instead of occupying a slot for a wasted decode round
-        if req.max_new_tokens <= 1 or tok == sc.eos_token:
+        if self._apply_eos(req.max_new_tokens <= 1, tok):
             req.done_at = req.first_token_at
             self.completed.append(req)
             return
@@ -678,10 +785,11 @@ class ServingEngine:
         Validates the partition as a *runnable* artifact -- measured
         pipeline throughput and fill bubble land in :meth:`stats`
         alongside the analytic numbers so regressions between the cost
-        model and the runtime are visible.  ``stage_meshes`` records the
-        submesh each stage would own (reported in stats); running each
-        stage's decode slice *on* its submesh is the ROADMAP "true
-        per-stage decode" follow-up.
+        model and the runtime are visible.  This is the functional-tile
+        *bench* mode (microbatch dynamics at depth M); the serving
+        rounds themselves run true per-stage decode through the same
+        executor (``runtime.stage_decode``) whenever the engine has a
+        partitioned plan on the device path.
         """
         if self.partitioned_plan is None:
             raise ValueError("engine has no partitioned plan "
@@ -784,6 +892,14 @@ class ServingEngine:
                     if not self.stage_meshes_shared
                     else len(self.mesh.devices.ravel())
                 )
+            if self._staged is not None:
+                out["stage_decode"] = 1.0
+                out["stage_decode_rounds"] = float(
+                    self._staged.rounds_executed
+                )
+                out["stage_decode_clock_ok"] = float(self._staged.clock_ok)
+                for k, (a, b) in enumerate(self._staged.ranges):
+                    out[f"stage{k}_decode_layers"] = float(b - a)
         return out
 
 
@@ -880,6 +996,61 @@ def plan_model_streaming(
     return plan_streaming(tiles, pu, search=search)
 
 
+def _gemm_layer(name: str, n_layers: int) -> int:
+    """Model-layer index of a ``model_gemms`` entry (``L{i}/...``);
+    layer-less tails (unembed) count as past the last layer."""
+    if name.startswith("L"):
+        head = name.split("/", 1)[0]
+        try:
+            return int(head[1:])
+        except ValueError:
+            pass
+    return n_layers
+
+
+def attach_decode_ranges(
+    cfg: ModelConfig,
+    gemms: Sequence[Tuple[str, int, int, int]],
+    pplan: PartitionedPlan,
+) -> PartitionedPlan:
+    """Derive each stage's *model-layer* decode range from its GEMM range.
+
+    A model layer belongs to the stage that owns its first GEMM; the
+    resulting boundaries are snapped to the family's allowed slice
+    points (``ModelAPI.decode_slice_points`` -- e.g. hybrid boundaries
+    must be group-aligned) and kept monotone, so the ranges tile
+    ``[0, n_layers)`` exactly.  A stage whose snapped range is empty
+    passes hidden states through untouched (possible when K approaches
+    or exceeds the layer count)."""
+    api = model_api.get_api(cfg)
+    pts = sorted(api.decode_slice_points(cfg))
+    L = cfg.n_layers
+    first_gemm: Dict[int, int] = {}
+    for gi, (name, *_rest) in enumerate(gemms):
+        first_gemm.setdefault(_gemm_layer(name, L), gi)
+    bounds = [0]
+    for st in pplan.stages[1:]:
+        gs = st.layer_start            # gemm-sequence index
+        bounds.append(
+            sum(1 for l in range(L) if first_gemm.get(l, 1 << 60) < gs)
+        )
+    bounds.append(L)
+    snapped = [0]
+    for b in bounds[1:-1]:
+        p = min(pts, key=lambda q: (abs(q - b), q))
+        snapped.append(min(max(p, snapped[-1]), L))
+    snapped.append(L)
+    stages = tuple(
+        dataclasses.replace(
+            s,
+            decode_layer_start=snapped[k],
+            decode_layer_stop=snapped[k + 1],
+        )
+        for k, s in enumerate(pplan.stages)
+    )
+    return PartitionedPlan(stages=stages)
+
+
 def plan_partitioned_streaming(
     cfg: ModelConfig,
     pus: Sequence[PUConfig],
@@ -892,8 +1063,10 @@ def plan_partitioned_streaming(
     and each stage gets its own two-phase schedule (capacity + load
     channel per PU) -- the served model streams across the whole fleet
     instead of replicating frames.  ``search`` selects each stage's
-    schedule-search strategy.
+    schedule-search strategy.  Each stage also carries the model-layer
+    decode range its layer slicers consume (:func:`attach_decode_ranges`),
+    making the plan runnable by ``runtime.stage_decode``.
     """
-    return partition_gemms(
-        model_gemms(cfg, batch_tokens), list(pus), search=search
-    )
+    gemms = model_gemms(cfg, batch_tokens)
+    pplan = partition_gemms(gemms, list(pus), search=search)
+    return attach_decode_ranges(cfg, gemms, pplan)

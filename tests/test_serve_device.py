@@ -114,6 +114,20 @@ def test_default_bucket_ladder():
     assert default_prefill_buckets(64) == (16, 32, 64)
 
 
+def test_bucketed_prefill_flag_per_family():
+    """Attention-backed families keep bucketed admission; recurrent
+    families are exact-length.  (Regression: the encdec flag was once
+    silently dropped in a ModelAPI refactor, disabling admission
+    batching and warmup's bucket ladder for the whole family.)"""
+    want = {
+        "olmo-1b": True, "mixtral-8x7b": True, "internvl2-26b": True,
+        "whisper-medium": True, "mamba2-780m": False, "zamba2-1.2b": False,
+    }
+    for arch, flag in want.items():
+        cfg = smoke_variant(get_config(arch))
+        assert model_api.get_api(cfg).supports_bucketed_prefill is flag, arch
+
+
 def test_bucketed_prefill_matches_isolated_dense():
     """Right-padded batched prefill is exactly the lane-isolated prefill
     for dense models: logits at each row's last real token and the cache
@@ -331,6 +345,174 @@ def test_oversized_generation_budget_clamped(host_sampling):
     done = eng.run_until_drained()
     assert len(done) == 1
     assert 1 <= len(done[0].out_tokens) <= 30
+
+
+# ---------------------------------------------------------------------------
+# satellite: recurrent families must reject bucketed lengths loudly
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "zamba2-1.2b"])
+def test_recurrent_prefill_rejects_lengths(arch):
+    """ssm/hybrid prefill used to silently drop batch['lengths']: a
+    caller padding prompts would push the pad tail through the conv/SSD
+    state and serve corrupted prefills.  Now it raises."""
+    cfg = smoke_variant(get_config(arch))
+    api = model_api.get_api(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.zeros((1, 16), jnp.int32),
+        "lengths": jnp.asarray([9], jnp.int32),
+    }
+    with pytest.raises(ValueError, match="bucketed prefill"):
+        api.prefill(cfg, params, batch)
+    # lengths=None passes through untouched
+    logits, _ = api.prefill(
+        cfg, params, {"tokens": jnp.zeros((1, 16), jnp.int32),
+                      "lengths": None},
+    )
+    assert logits.shape == (1, cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# satellite: ring-budget boundary (prompt of length max_len - 1)
+# ---------------------------------------------------------------------------
+
+
+def test_prompt_max_len_minus_one_keeps_full_context():
+    """keep = max_len - max_new: a length max_len - 1 prompt with a
+    1-token budget fits whole (no decode write ever lands past the
+    ring).  The old ``- 1`` clamp silently dropped its first token --
+    the reference engine with a roomier cache exposes the difference."""
+    cfg, big = _engine(max_len=128)
+    prompt = _prompts(cfg, 1, length=63, seed=17)[0]
+    big.submit(prompt.copy(), max_new_tokens=1)
+    ref = big.run_until_drained()[0].out_tokens
+
+    _, tight = _engine(max_len=64)
+    tight.submit(prompt.copy(), max_new_tokens=1)
+    assert tight.run_until_drained()[0].out_tokens == ref
+
+
+@pytest.mark.parametrize("host_sampling", [True, False])
+def test_budget_boundary_emits_full_generation(host_sampling):
+    """At keep = max_len - max_new exactly, all max_new tokens emit and
+    every KV write stays in bounds (the last lands at max_len - 2)."""
+    max_len, max_new = 64, 6
+    cfg, eng = _engine(
+        max_len=max_len, max_new_tokens=max_new, host_sampling=host_sampling
+    )
+    prompt = _prompts(cfg, 1, length=max_len - 1, seed=23)[0]
+    eng.submit(prompt.copy())
+    done = eng.run_until_drained()
+    assert len(done) == 1
+    assert len(done[0].out_tokens) == max_new
+
+
+def test_budget_boundary_host_device_parity():
+    max_len, max_new = 64, 6
+    cfg, host = _engine(
+        max_len=max_len, max_new_tokens=max_new, host_sampling=True
+    )
+    _, dev = _engine(max_len=max_len, max_new_tokens=max_new)
+    prompt = _prompts(cfg, 1, length=max_len - 1, seed=29)[0]
+    host.submit(prompt.copy())
+    dev.submit(prompt.copy())
+    assert (
+        host.run_until_drained()[0].out_tokens
+        == dev.run_until_drained()[0].out_tokens
+    )
+
+
+# ---------------------------------------------------------------------------
+# satellite: eos_token == 0 is a real stop token on both paths
+# ---------------------------------------------------------------------------
+
+
+def _zeroed_engine(host_sampling, eos_token):
+    """All-zero params make every logit equal, so greedy argmax always
+    emits token 0 -- the only way to force the id-0 boundary case."""
+    cfg = smoke_variant(get_config("olmo-1b"))
+    api = model_api.get_api(cfg)
+    params = jax.tree.map(
+        jnp.zeros_like, api.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    eng = ServingEngine(
+        cfg, params,
+        ServeConfig(
+            max_batch=2, max_len=64, max_new_tokens=6,
+            host_sampling=host_sampling, eos_token=eos_token,
+        ),
+    )
+    return cfg, eng
+
+
+@pytest.mark.parametrize("host_sampling", [True, False])
+def test_eos_token_zero_stops_generation(host_sampling):
+    """eos_token=0 must terminate (the guards read ``>= 0``); with
+    all-equal logits greedy emits 0 immediately, so the request
+    completes at admission with exactly one token."""
+    cfg, eng = _zeroed_engine(host_sampling, eos_token=0)
+    eng.submit(_prompts(cfg, 1)[0])
+    done = eng.run_until_drained()
+    assert len(done) == 1
+    assert done[0].out_tokens == [0]
+    assert eng.active == 0
+
+
+@pytest.mark.parametrize("host_sampling", [True, False])
+def test_negative_eos_disables_stopping(host_sampling):
+    """eos_token=-1 ("never stop") must NOT treat the emitted 0s as
+    terminal: the full budget runs."""
+    cfg, eng = _zeroed_engine(host_sampling, eos_token=-1)
+    eng.submit(_prompts(cfg, 1)[0])
+    done = eng.run_until_drained()
+    assert done[0].out_tokens == [0] * 6
+
+
+# ---------------------------------------------------------------------------
+# satellite: the MoE host/device greedy divergence, narrowed
+# ---------------------------------------------------------------------------
+
+
+def test_moe_divergence_is_exactly_padded_batched_admission():
+    """PR 4 documented mixtral's host/device greedy divergence as
+    "shared expert capacity".  Narrowed: with *exact-length* prompts
+    admitted one per round (no bucket padding, no admission grouping)
+    the device engine is bit-identical to the host loop even for MoE --
+    decode itself and isolated admission are exact.  The divergence is
+    entirely the capacity term's dependence on the padded/grouped
+    prefill token count, asserted on the capacity function below."""
+    cfg = smoke_variant(get_config("mixtral-8x7b"))
+    api = model_api.get_api(cfg)
+    if "mixtral-8x7b" not in _PARAMS:
+        _PARAMS["mixtral-8x7b"] = api.init_params(cfg, jax.random.PRNGKey(0))
+    params = _PARAMS["mixtral-8x7b"]
+    S = 12
+    mk = lambda host: ServingEngine(
+        cfg, params,
+        ServeConfig(
+            max_batch=3, max_len=64, max_new_tokens=5,
+            host_sampling=host, max_decode_block=1,
+            prefill_buckets=(S,),          # exact-length: zero padding
+        ),
+    )
+    host, dev = mk(True), mk(False)
+    prompts = _prompts(cfg, 4, length=S, seed=31)
+    for p in prompts:                      # one admission per round on
+        host.submit(p.copy())              # both engines: same grouping
+        dev.submit(p.copy())
+        host.step()
+        dev.step()
+    dh = {r.uid: r.out_tokens for r in host.run_until_drained()}
+    dd = {r.uid: r.out_tokens for r in dev.run_until_drained()}
+    assert dh == dd
+
+    # ...and the mechanism: expert capacity is a function of the total
+    # token count, so right-padding 12 -> 16 changes routing capacity
+    from repro.models.mlp import moe_capacity
+
+    assert moe_capacity(cfg, S) != moe_capacity(cfg, 16)
 
 
 def test_scatter_cache_lanes_drops_out_of_bounds_rows():
