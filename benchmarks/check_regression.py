@@ -28,10 +28,11 @@ Gates:
   decode tokens/s >= 1.5x the legacy host-loop engine per config, zero
   jit retraces after warmup under mixed-length traffic, and greedy token
   streams bit-identical to the host loop on the dense (bit-gated)
-  configs.  The ``pipeline_decode`` record gates true per-stage decode:
-  the K=2 --multi-pu engine's greedy streams bit-identical to the
-  single-PU device loop, >= 2 stages, the executed virtual clock
-  matching the plan recurrence, zero retraces after warmup.
+  configs.  The ``pipeline_decode`` record gates overlapped staged
+  decode: the K=2 --multi-pu engine's greedy streams bit-identical to
+  the single-PU device loop, >= 2 stages, the executed virtual clock
+  matching the plan recurrence, zero retraces after warmup, and
+  steady-state decode throughput >= 1.0x the fused single-PU loop.
 
 Exit code 1 on any regression, with one line per violation.
 """
@@ -66,6 +67,13 @@ SEARCH_WORKLOADS = ("search_resnet50", "search_resnet50_tight")
 # over the legacy host-loop engine (measured medians 1.8x-2.6x on the
 # dev container; the floor is the PR's acceptance criterion).
 SERVE_DECODE_SPEEDUP_FLOOR = 1.5
+
+# Overlapped staged decode (--multi-pu K=2): the auto-tuned engine's
+# steady-state decode rate must match the fused single-PU device loop
+# (measured median ~1.5x with the coalesced single-device block; the
+# floor is the PR's acceptance criterion, up from the 0.34x serial
+# staged loop it replaces).
+PIPELINE_DECODE_VS_SINGLE_PU_FLOOR = 1.0
 
 
 def committed(name: str, ref: str) -> dict | None:
@@ -233,6 +241,13 @@ def check_serve(cand: dict, errors: list[str]) -> None:
             errors.append(
                 f"serve/pipeline_decode: {pd.get('retraces_after_warmup')} "
                 "retraces after warmup (ceiling is 0)"
+            )
+        ratio = pd.get("vs_single_pu", 0.0)
+        if ratio < PIPELINE_DECODE_VS_SINGLE_PU_FLOOR:
+            errors.append(
+                f"serve/pipeline_decode: staged K=2 steady-state decode "
+                f"{ratio:.2f}x the fused single-PU loop < "
+                f"{PIPELINE_DECODE_VS_SINGLE_PU_FLOOR:.1f}x floor"
             )
 
 

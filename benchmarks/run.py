@@ -647,16 +647,20 @@ def bench_serve_suite(fast: bool):
     (DESIGN.md SS7): identical mixed-length traffic through both engines
     per model config, recording decode throughput, the jit trace deltas
     after warmup, greedy stream bit-identity, per-bucket prefill latency,
-    and TTFT percentiles under a Poisson arrival trace; plus the
-    ``pipeline_decode`` record -- a K=2 --multi-pu engine serving the
-    same traffic through true per-stage decode, gated on greedy
-    bit-identity with the single-PU device loop and on the executor's
-    virtual clock reproducing the plan recurrence.  Emits
-    BENCH_serve.json at the repo root; CI gates on the >=1.5x speedup
-    floor, a zero-retrace ceiling after warmup, and bit-identity on the
-    dense configs (MoE capacity coupling legitimately perturbs logits
-    under admission regrouping, so mixtral's stream equality is recorded
-    but not gated)."""
+    and TTFT/TPOT percentiles under a Poisson arrival trace (fused and
+    staged); plus the ``pipeline_decode`` record -- a K=2 --multi-pu
+    engine serving the same traffic through the overlapped staged
+    decode loop (end-to-end medians over paired trials + steady-state
+    decode-phase rates), gated on greedy bit-identity with the
+    single-PU device loop, on the executor's virtual clock reproducing
+    the plan recurrence, and on the >=1.0x steady-state decode
+    throughput floor vs the fused loop; a lane-group sweep
+    (M in {1,2,4,auto} x K in {2,3}) records bubble fraction and
+    tokens/s per point.  Emits BENCH_serve.json at the repo root; CI
+    gates on the >=1.5x speedup floor, a zero-retrace ceiling after
+    warmup, and bit-identity on the dense configs (MoE capacity
+    coupling legitimately perturbs logits under admission regrouping,
+    so mixtral's stream equality is recorded but not gated)."""
     import time as _time
 
     import jax
@@ -691,22 +695,31 @@ def bench_serve_suite(fast: bool):
     def run_one(eng, prompts):
         eng.warmup()
         traces0 = dict(eng.trace_counts)
-        t0 = _time.perf_counter()
-        for p in prompts:
-            eng.submit(p.copy())
-        done = eng.run_until_drained()
+        n0 = len(eng.completed)       # run_until_drained returns the
+        t0 = _time.perf_counter()     # engine-lifetime completed list;
+        for p in prompts:             # scope this trial's tokens/streams
+            eng.submit(p.copy())      # so engines can be re-trialed
+        eng.run_until_drained()
         wall = _time.perf_counter() - t0
+        done = eng.completed[n0:]
         toks = sum(len(r.out_tokens) for r in done)
-        streams = {r.uid: list(r.out_tokens) for r in done}
+        # key by arrival order within the trial (uids are lifetime
+        # counters and would shift between trials)
+        streams = {
+            i: list(r.out_tokens)
+            for i, r in enumerate(sorted(done, key=lambda r: r.uid))
+        }
         retraces = {
             k: eng.trace_counts[k] - traces0[k] for k in traces0
         }
         return toks / wall, wall, streams, retraces
 
-    def decode_phase_rate(cfg, params, host):
+    def decode_phase_rate(cfg, params, host, stream_pus=None, m=0):
         """Steady-state decode rate with prefill out of the timed window:
         admit a full batch, then time the pure decode drain.  Median over
-        trials (single-run walls are jittery at smoke scale)."""
+        trials (single-run walls are jittery at smoke scale).  With
+        ``stream_pus`` the engine decodes through the overlapped staged
+        loop (m=0 auto-tunes the lane-group depth)."""
         trials = 3 if fast else 5
         decode_new = 48 if fast else 64
         rng = np.random.default_rng(9)
@@ -717,6 +730,7 @@ def bench_serve_suite(fast: bool):
                 ServeConfig(
                     max_batch=4, max_len=decode_new + 40,
                     max_new_tokens=decode_new, host_sampling=host,
+                    stream_pus=stream_pus, decode_microbatches=m,
                 ),
             )
             eng.warmup()
@@ -788,26 +802,96 @@ def bench_serve_suite(fast: bool):
             }
             records["configs"][arch] = rec
 
-        # true per-stage decode (--multi-pu): K=2 serving rounds run each
-        # stage's model-layer slice through the stage pipeline with real
-        # activation handoffs; greedy streams must stay bit-identical to
-        # the single-PU device loop and the executor's virtual clock must
-        # keep reproducing the plan recurrence (both CI-gated)
+        # true per-stage decode (--multi-pu): the overlapped staged loop
+        # serves the same traffic as the single-PU device engine.  The
+        # headline K=2 auto-tuned record is the median over paired
+        # in-process trials (single-run walls are jittery at smoke
+        # scale) and is CI-gated on greedy bit-identity, the virtual
+        # clock reproducing the plan recurrence, zero retraces after
+        # warmup, and the >=1.0x throughput floor vs the fused loop.
+        # The lane-group sweep (M x K) below is informational.
+        import dataclasses
+
         from repro.core.pu import host_offload_config, tpu_v5e_config
+
+        def stage_pus(k):
+            return [
+                host_offload_config() if i % 2 == 0 else tpu_v5e_config()
+                for i in range(k)
+            ]
+
+        def staged_engine(cfg, params, k, m):
+            return ServingEngine(
+                cfg, params,
+                ServeConfig(
+                    max_batch=4, max_len=96, max_new_tokens=max_new,
+                    stream_pus=stage_pus(k), decode_microbatches=m,
+                ),
+            )
 
         cfg = smoke_variant(get_config("olmo-1b"))
         assert olmo_device is not None, "olmo-1b left the arch list"
-        params, dev_streams, dev_tps = olmo_device
-        staged = ServingEngine(
-            cfg, params,
-            ServeConfig(
-                max_batch=4, max_len=96, max_new_tokens=max_new,
-                stream_pus=[host_offload_config(), tpu_v5e_config()],
-            ),
-        )
+        params, dev_streams, _ = olmo_device
         prompts = traffic(cfg)
-        st_tps, st_wall, st_streams, st_retr = run_one(staged, prompts)
+        trials = 3 if fast else 5
+        staged = staged_engine(cfg, params, 2, 0)
+        base = mk_engine(cfg, params, host=False)
+        ratios, st_rates, dev_rates, walls = [], [], [], []
+        bit, retr_total = True, 0
+        for _ in range(trials):
+            st_tps, st_wall, st_streams, st_retr = run_one(staged, prompts)
+            dev_tps, _, base_streams, _ = run_one(base, prompts)
+            ratios.append(st_tps / dev_tps)
+            st_rates.append(st_tps)
+            dev_rates.append(dev_tps)
+            walls.append(st_wall)
+            bit = bit and st_streams == dev_streams == base_streams
+            retr_total += sum(st_retr.values())
         st = staged.stats()
+
+        # the gated ratio is the steady-state decode phase (prefill and
+        # admission barriers out of the timed window, same methodology
+        # as the per-config decode_speedup gate): this is the loop the
+        # overlap optimizes, and end-to-end walls at smoke scale are
+        # admission-jitter-bound (the e2e ratio stays recorded below)
+        st_dec = decode_phase_rate(
+            cfg, params, host=False, stream_pus=stage_pus(2)
+        )
+        dev_dec = decode_phase_rate(cfg, params, host=False)
+
+        # lane-group sweep: M in {1 (serial reference), 2, 4, auto} x
+        # K in {2, 3} stages; K=3 needs one model layer per stage, so
+        # it runs on a 4-layer variant with its own fused baseline
+        sweep = []
+        for k in (2, 3):
+            if k == 2:
+                s_cfg, s_params = cfg, params
+                s_base = float(np.median(dev_rates))
+                ref_streams = dev_streams
+            else:
+                s_cfg = dataclasses.replace(cfg, n_layers=4)
+                s_api = model_api.get_api(s_cfg)
+                s_params = s_api.init_params(s_cfg, jax.random.PRNGKey(0))
+                ref_eng = mk_engine(s_cfg, s_params, host=False)
+                s_base, _, ref_streams, _ = run_one(
+                    ref_eng, traffic(s_cfg)
+                )
+            for m in (1, 2, 4, 0):
+                eng = staged_engine(s_cfg, s_params, k, m)
+                tps, _, streams, retr = run_one(eng, traffic(s_cfg))
+                es = eng.stats()
+                sweep.append({
+                    "k": k,
+                    "m_requested": m,
+                    "m": int(es["stage_decode_microbatches"]),
+                    "tokens_per_s": tps,
+                    "e2e_vs_single_pu": tps / s_base,
+                    "bubble": float(es["stage_decode_bubble"]),
+                    "clock_ok": bool(es["stage_decode_clock_ok"]),
+                    "greedy_bit_identical": streams == ref_streams,
+                    "retraces_after_warmup": sum(retr.values()),
+                })
+
         records["pipeline_decode"] = {
             "arch": "olmo-1b",
             "stages": int(st["partition_stages"]),
@@ -816,40 +900,60 @@ def bench_serve_suite(fast: bool):
                 int(st[k]) for k in sorted(st) if k.endswith("_decode_layers")
             ],
             "clock_ok": bool(st["stage_decode_clock_ok"]),
-            "greedy_bit_identical": st_streams == dev_streams,
-            "tokens_per_s": st_tps,
-            "single_pu_tokens_per_s": dev_tps,
-            "vs_single_pu": st_tps / dev_tps,
-            "retraces_after_warmup": sum(st_retr.values()),
-            "wall_s": st_wall,
+            "greedy_bit_identical": bit,
+            "microbatches": int(st["stage_decode_microbatches"]),
+            "queue_depth": int(st["stage_decode_queue_depth"]),
+            "coalesced": bool(st["stage_decode_coalesced"]),
+            "bubble": float(st["stage_decode_bubble"]),
+            "trials": trials,
+            "decode_tokens_per_s": st_dec,
+            "single_pu_decode_tokens_per_s": dev_dec,
+            "vs_single_pu": st_dec / dev_dec,
+            "tokens_per_s": float(np.median(st_rates)),
+            "single_pu_tokens_per_s": float(np.median(dev_rates)),
+            "e2e_vs_single_pu": float(np.median(ratios)),
+            "retraces_after_warmup": retr_total,
+            "wall_s": float(np.median(walls)),
+            "sweep": sweep,
         }
 
-        # TTFT under a Poisson arrival trace (device engine, olmo):
-        # requests arrive on the open-loop clock; the engine keeps fusing
-        # decode blocks between admissions
+        # TTFT / TPOT under a Poisson arrival trace (olmo): requests
+        # arrive on the open-loop clock; the engine keeps fusing decode
+        # blocks between admissions.  Both the fused device loop and the
+        # K=2 overlapped staged loop serve the same trace.
+        n_arr = 6 if fast else 12
+
+        def poisson_trace(eng):
+            eng.warmup()
+            rng = np.random.default_rng(5)
+            gaps = rng.exponential(0.08, n_arr)
+            arrivals = np.cumsum(gaps)
+            ps = traffic(cfg, seed=6)
+            t0 = _time.perf_counter()
+            i = 0
+            while i < n_arr or eng.pending or eng.active:
+                now = _time.perf_counter() - t0
+                while i < n_arr and arrivals[i] <= now:
+                    eng.submit(ps[i % len(ps)].copy())
+                    i += 1
+                if eng.pending or eng.active:
+                    eng.step()
+                elif i < n_arr:
+                    _time.sleep(min(0.005, arrivals[i] - now))
+            ttfts = sorted(
+                r.ttft_s for r in eng.completed if r.ttft_s is not None
+            )
+            tpots = sorted(
+                r.tpot_s for r in eng.completed if r.tpot_s is not None
+            )
+            return ttfts, tpots
+
         cfg = smoke_variant(get_config("olmo-1b"))
         api = model_api.get_api(cfg)
         params = api.init_params(cfg, jax.random.PRNGKey(0))
-        eng = mk_engine(cfg, params, host=False)
-        eng.warmup()
-        rng = np.random.default_rng(5)
-        n_arr = 6 if fast else 12
-        gaps = rng.exponential(0.08, n_arr)
-        arrivals = np.cumsum(gaps)
-        prompts = traffic(cfg, seed=6)
-        t0 = _time.perf_counter()
-        i = 0
-        while i < n_arr or eng.pending or eng.active:
-            now = _time.perf_counter() - t0
-            while i < n_arr and arrivals[i] <= now:
-                eng.submit(prompts[i % len(prompts)].copy())
-                i += 1
-            if eng.pending or eng.active:
-                eng.step()
-            elif i < n_arr:
-                _time.sleep(min(0.005, arrivals[i] - now))
-        ttfts = sorted(
-            r.ttft_s for r in eng.completed if r.ttft_s is not None
+        ttfts, tpots = poisson_trace(mk_engine(cfg, params, host=False))
+        st_ttfts, st_tpots = poisson_trace(
+            staged_engine(cfg, params, 2, 0)
         )
         records["ttft_poisson"] = {
             "arrival_rate_hz": 1.0 / 0.08,
@@ -857,6 +961,14 @@ def bench_serve_suite(fast: bool):
             "p50_s": float(np.percentile(ttfts, 50)),
             "p95_s": float(np.percentile(ttfts, 95)),
             "max_s": float(ttfts[-1]),
+            "tpot_p50_s": float(np.percentile(tpots, 50)),
+            "tpot_p95_s": float(np.percentile(tpots, 95)),
+            "staged": {
+                "ttft_p50_s": float(np.percentile(st_ttfts, 50)),
+                "ttft_p95_s": float(np.percentile(st_ttfts, 95)),
+                "tpot_p50_s": float(np.percentile(st_tpots, 50)),
+                "tpot_p95_s": float(np.percentile(st_tpots, 95)),
+            },
         }
         return records
 
@@ -871,9 +983,13 @@ def bench_serve_suite(fast: bool):
             f",bit={int(rec['greedy_bit_identical'])})"
         )
     tt = records["ttft_poisson"]
+    pd = records["pipeline_decode"]
     derived = (
         ";".join(parts)
         + f";ttft_p50={tt['p50_s']:.3f}s;ttft_p95={tt['p95_s']:.3f}s"
+        + f";tpot_p50={tt['tpot_p50_s']:.4f}s"
+        + f";staged_k2:x{pd['vs_single_pu']:.2f}"
+        f"(m={pd['microbatches']},bub={pd['bubble']:.2f})"
     )
     emit("serve", us, derived, records)
     (ROOT / "BENCH_serve.json").write_text(json.dumps(records, indent=1))

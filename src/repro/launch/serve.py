@@ -78,11 +78,14 @@ def main() -> int:
                          "decode loop and only attach the partition "
                          "analytically (parity-debugging escape hatch)")
     ap.add_argument("--microbatches", type=int, default=0, metavar="M",
-                    help="microbatch depth for the executed stage "
-                         "pipeline with --multi-pu; 0 (default) "
-                         "auto-tunes M and the handoff queue depth "
-                         "against --target-bubble using the executed "
-                         "bubble measurement")
+                    help="lane-group / microbatch depth M with "
+                         "--multi-pu: splits the decode slot batch into "
+                         "M lane groups for the overlapped staged loop "
+                         "and sets the executed tile pipeline's depth; "
+                         "1 = serial reference, 0 (default) auto-tunes "
+                         "M and the handoff queue depth against "
+                         "--target-bubble using the executed bubble "
+                         "measurement")
     ap.add_argument("--target-bubble", type=float, default=0.10,
                     help="target fill/drain bubble fraction for the "
                          "microbatch auto-tuner (default 0.10)")
@@ -128,6 +131,7 @@ def main() -> int:
             else None
         ),
         stage_decode=not args.no_stage_decode,
+        decode_microbatches=args.microbatches,
         aimc=AIMCNoiseModel() if args.aimc else None,
         plan_search=(
             SearchConfig(

@@ -24,6 +24,7 @@ from repro.plan.partition import (
     balance_layer_ranges,
     partition_gemms,
     partition_layers,
+    snap_boundaries_nonempty,
 )
 from repro.plan.planner import SearchConfig, plan
 
@@ -42,4 +43,5 @@ __all__ = [
     "balance_layer_ranges",
     "partition_gemms",
     "partition_layers",
+    "snap_boundaries_nonempty",
 ]

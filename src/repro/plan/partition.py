@@ -145,6 +145,37 @@ class PartitionedPlan:
                 done[k, f] = max(ready, prev) + s.stage_s
         return done
 
+    def decode_pipeline_events(
+        self,
+        n_groups: int,
+        n_rounds: int,
+        group_scale: float = None,
+    ) -> "np.ndarray":
+        """Predicted (K, R*M) completion times of the *overlapped staged
+        decode* schedule: R rounds, each split into M lane-group frames
+        carrying ``group_scale`` (default ``1/M``) of the slot batch.
+
+        Frame ``i = r*M + g`` is lane group ``g`` of round ``r``.  Same
+        recurrence as :meth:`pipeline_events` with stage/handoff times
+        prorated by the group scale, plus the cross-round sampling
+        dependency: group ``g`` of round ``r+1`` may enter stage 0 only
+        after group ``g`` of round ``r`` drained the last stage (its
+        logits feed the sampled token the next round consumes).  This is
+        what the executed virtual clock must reproduce for ``clock_ok``.
+        """
+        K, M, R = len(self.stages), n_groups, n_rounds
+        scale = (1.0 / n_groups) if group_scale is None else group_scale
+        done = np.zeros((K, R * M))
+        for i in range(R * M):
+            for k, s in enumerate(self.stages):
+                if k:
+                    ready = done[k - 1, i] + s.handoff_in_s * scale
+                else:
+                    ready = done[K - 1, i - M] if i >= M else 0.0
+                prev = done[k, i - 1] if i else 0.0
+                done[k, i] = max(ready, prev) + s.stage_s * scale
+        return done
+
     def pipeline_makespan(self, n_microbatches: int) -> float:
         return float(self.pipeline_events(n_microbatches)[-1, -1])
 
@@ -178,6 +209,45 @@ class PartitionedPlan:
             "fps_per_tops": self.fps_per_tops,
             "feasible": self.feasible,
         }
+
+
+def snap_boundaries_nonempty(
+    raw_bounds: Sequence[float],
+    slice_points: Sequence[int],
+    n_layers: int,
+) -> List[int]:
+    """Snap K-1 interior stage boundaries onto allowed slice points,
+    keeping every stage non-empty whenever enough interior points exist.
+
+    Each raw boundary picks the nearest *interior* slice point (strictly
+    above the previous pick) that still leaves enough distinct interior
+    points for the boundaries after it -- so a boundary never greedily
+    grabs a point that forces a later stage empty.  Only when the
+    feasibility lookahead fails (more boundaries than interior points
+    remain, i.e. K exceeds what the slice grid can host) does a boundary
+    fall back to the nearest monotone point, which may duplicate its
+    neighbour and yield an empty stage -- the documented K-too-large
+    degenerate case.
+    """
+    pts = sorted(set(slice_points))
+    interior = [p for p in pts if 0 < p < n_layers]
+    n_bounds = len(raw_bounds)
+    out: List[int] = []
+    prev = 0
+    for i, b in enumerate(raw_bounds):
+        after = n_bounds - i - 1
+        feasible = [
+            p for p in interior
+            if p > prev and sum(1 for q in interior if q > p) >= after
+        ]
+        if feasible:
+            c = min(feasible, key=lambda q: (abs(q - b), q))
+        else:
+            allowed = [p for p in pts if prev <= p <= n_layers]
+            c = min(allowed, key=lambda q: (abs(q - b), q))
+        out.append(c)
+        prev = c
+    return out
 
 
 def balance_layer_ranges(

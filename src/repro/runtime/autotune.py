@@ -33,6 +33,7 @@ from repro.runtime.pipeline_exec import (
     FetchFn,
     PipelineReport,
     RunTileFn,
+    StagePipelineExecutor,
     execute_partitioned_plan,
 )
 
@@ -86,6 +87,148 @@ def analytic_microbatches(n_stages: int, target_bubble: float) -> int:
         raise ValueError("target_bubble must be positive")
     return max(1, math.ceil((n_stages - 1) * (1.0 - target_bubble)
                             / target_bubble))
+
+
+@dataclasses.dataclass
+class StagedDecodeTune:
+    """Result of tuning the *overlapped staged decode* schedule: lane
+    groups M (must divide the slot batch) and handoff queue depth."""
+
+    n_groups: int
+    queue_depth: int
+    lanes: int
+    bubble_measured: float          # executed bubble at the chosen point
+    target_bubble: float
+    within_tolerance: bool
+    virtual_fps: float              # lane-group frames / virtual makespan
+    trials: List[dict]              # every (m, bubble, fps) evaluated
+    depth_trials: List[dict]
+    report: PipelineReport
+
+    def summary(self) -> dict:
+        return {
+            "n_groups": float(self.n_groups),
+            "queue_depth": float(self.queue_depth),
+            "lanes": float(self.lanes),
+            "bubble_measured": self.bubble_measured,
+            "target_bubble": self.target_bubble,
+            "within_tolerance": self.within_tolerance,
+            "virtual_fps": self.virtual_fps,
+            "trials": self.trials,
+            "depth_trials": self.depth_trials,
+        }
+
+
+def _probe_staged_decode(
+    plan: PartitionedPlan, m: int, rounds: int, queue_depth: int
+) -> PipelineReport:
+    """One functional overlapped-decode block: R rounds of M lane-group
+    frames with the real cross-round dependency chain (round r+1 of a
+    group enters stage 0 at the virtual time round r drained), no model
+    compute.  Measures the executed bubble the schedule actually
+    achieves -- fill, imbalance, and the sampling round-trip included."""
+    ex = StagePipelineExecutor(plan, queue_depth=queue_depth)
+    session = ex.open_session()
+    scale = 1.0 / m
+    try:
+        for g in range(m):
+            session.put(g, ready_t=0.0, scale=scale, round_id=0)
+        for i in range(rounds * m):
+            frame, _payload, end_t = session.get()
+            r, g = divmod(frame, m)
+            if r + 1 < rounds:
+                session.put(g, ready_t=end_t, scale=scale, round_id=r + 1)
+    except BaseException:
+        session.abort()
+        raise
+    return session.close()
+
+
+def tune_staged_decode(
+    plan: PartitionedPlan,
+    lanes: int,
+    cfg: AutotuneConfig = AutotuneConfig(),
+    *,
+    probe_rounds: int = 16,
+) -> StagedDecodeTune:
+    """Tune lane-group count M and queue depth for overlapped staged
+    decode on ``plan`` with a ``lanes``-slot batch.
+
+    Candidate M are the divisors of ``lanes`` (lane groups must tile the
+    slot batch so per-group state slices stay static shapes).  Every
+    candidate is probed with a functional overlapped block and the
+    *executed* bubble decides, exactly like :func:`tune_pipeline`: the
+    smallest M inside the one-sided tolerance band wins.  When no
+    candidate reaches the band (an imbalance- or stall-dominated plan
+    whose bubble floor no M can cross), the knee rule applies: the
+    smallest M whose bubble is within a quarter of the observed spread
+    of the best -- deeper lane splitting costs real dispatch overhead
+    per frame, so it must buy measurable bubble to be worth it.  Queue
+    depth is then picked by real wall time at the chosen M (virtual
+    metrics are depth-invariant)."""
+    if lanes < 1:
+        raise ValueError("lanes must be >= 1")
+    hi_band = cfg.target_bubble * (1.0 + cfg.tolerance)
+    divisors = [m for m in range(1, lanes + 1) if lanes % m == 0]
+    divisors = [m for m in divisors if cfg.m_min <= m <= cfg.m_max] or [1]
+
+    trials: List[dict] = []
+    reps = {}
+    best_m = None
+    for m in divisors:
+        rep = _probe_staged_decode(plan, m, probe_rounds, queue_depth=2)
+        reps[m] = rep
+        trials.append(
+            {"m": m, "bubble": rep.bubble_measured,
+             "fps": rep.measured_fps, "wall_s": rep.wall_s}
+        )
+        if rep.bubble_measured <= hi_band:
+            # divisors ascend, so the first M inside the band is the
+            # smallest -- stop before spending probes on deeper splits
+            best_m = m
+            break
+    if best_m is None:
+        # knee rule over the full probe set
+        bubbles = {m: reps[m].bubble_measured for m in reps}
+        b_min, b_max = min(bubbles.values()), max(bubbles.values())
+        knee = b_min + 0.25 * (b_max - b_min)
+        best_m = min(m for m, b in bubbles.items() if b <= knee)
+    best_rep = reps[best_m]
+    within = best_rep.bubble_measured <= hi_band
+
+    depth_trials: List[dict] = []
+    depths = sorted(set(cfg.queue_depths)) or [2]
+    chosen_depth, chosen_rep = depths[0], None
+    if depths == [2]:
+        chosen_rep = best_rep
+    else:
+        drep = {}
+        for d in depths:
+            r = best_rep if d == 2 else _probe_staged_decode(
+                plan, best_m, probe_rounds, queue_depth=d
+            )
+            drep[d] = r
+            depth_trials.append({"depth": d, "wall_s": r.wall_s,
+                                 "bubble": r.bubble_measured})
+        best_wall = min(r.wall_s for r in drep.values())
+        for d in depths:
+            if drep[d].wall_s <= best_wall * (1.0 + cfg.wall_tolerance):
+                chosen_depth, chosen_rep = d, drep[d]
+                break
+    assert chosen_rep is not None
+
+    return StagedDecodeTune(
+        n_groups=best_m,
+        queue_depth=chosen_depth,
+        lanes=lanes,
+        bubble_measured=chosen_rep.bubble_measured,
+        target_bubble=cfg.target_bubble,
+        within_tolerance=within,
+        virtual_fps=chosen_rep.measured_fps,
+        trials=trials,
+        depth_trials=depth_trials,
+        report=chosen_rep,
+    )
 
 
 def tune_pipeline(

@@ -147,6 +147,180 @@ def _stage_tile_names(k: int, stage: StagePlan) -> List[str]:
     return [f"s{k}/t{i}" for i in range(stage.plan.n)]
 
 
+# marker a failed stage pushes downstream so a consumer blocked on the
+# drain queue wakes immediately instead of waiting out the stall timeout
+_FAILED = object()
+
+
+class PipelineSession:
+    """A persistent in-flight frame loop over the stage threads.
+
+    :meth:`StagePipelineExecutor.run` opens the pipeline, pushes a fixed
+    batch of M microbatches, and drains it to completion.  Overlapped
+    staged decode needs a different contract: frames are injected *as
+    their dependencies drain* (round r+1 of a lane group may only enter
+    stage 0 once round r of the same group left the last stage -- its
+    logits feed the token the next round consumes), and the pipeline
+    must stay open across rounds so the fill bubble is paid once per
+    decode block, not once per round.  A session keeps the K stage
+    threads (and their prefetch workers) alive between ``put``/``get``
+    calls; ``close()`` joins them and yields the :class:`PipelineReport`.
+
+    Frames carry ``(scale, round_id)`` alongside the payload: ``scale``
+    prorates the virtual stage/handoff/stall account for lane-group
+    microbatches carrying ``1/M`` of the slot batch, and ``round_id``
+    lets each stage run its weight-streaming tile loop once per round
+    (lane groups of the same round reuse the resident weights).
+
+    The drain queue is unbounded: the owner consumes frames between
+    puts, and a bounded drain could deadlock the owner's blocking
+    ``put`` against a full pipeline.
+    """
+
+    def __init__(
+        self, ex: "StagePipelineExecutor", queue_depth: Optional[int] = None
+    ):
+        self.ex = ex
+        K = len(ex.plan.stages)
+        depth = ex.queue_depth if queue_depth is None else queue_depth
+        self.qs: List["queue.Queue"] = [
+            queue.Queue(maxsize=depth) for _ in range(K)
+        ]
+        self.qs.append(queue.Queue())          # unbounded drain
+        self.traces = [
+            StageTrace(stage=k, pu=s.pu.name)
+            for k, s in enumerate(ex.plan.stages)
+        ]
+        self.errors: List[BaseException] = []
+        self._frames_in = 0
+        self._done_t: Dict[int, float] = {}
+        self._wall = 0.0
+        self._closed = False
+        with ex._active_lock:
+            ex._active = 0
+            ex._max_active = 0
+            ex._live_cores.clear()
+        self.threads = [
+            threading.Thread(
+                target=ex._stage_loop,
+                args=(k, self.qs[k], self.qs[k + 1], self.traces[k],
+                      self.errors),
+                name=f"stage-{k}", daemon=True,
+            )
+            for k in range(K)
+        ]
+        self._t0 = time.perf_counter()
+        for t in self.threads:
+            t.start()
+
+    @property
+    def frames_in(self) -> int:
+        return self._frames_in
+
+    def put(
+        self,
+        payload: Any,
+        *,
+        ready_t: float = 0.0,
+        scale: float = 1.0,
+        round_id: Optional[int] = None,
+    ) -> int:
+        """Inject one frame into stage 0; returns its frame index.
+
+        ``ready_t`` is the virtual time the payload becomes available
+        (the drain time of the frame it depends on); ``round_id``
+        defaults to the frame index (every frame streams its own tiles).
+        Blocks on the bounded stage-0 queue for backpressure."""
+        if self._closed:
+            raise ValueError("session is closed")
+        if self.errors:
+            raise self.errors[0]
+        f = self._frames_in
+        rid = f if round_id is None else round_id
+        self.qs[0].put((f, payload, float(ready_t), float(scale), rid))
+        self._frames_in += 1
+        return f
+
+    def get(self, timeout: float = 300.0):
+        """Block until the next frame drains; returns
+        ``(frame, payload, end_t)`` with ``end_t`` the virtual drain
+        time.  Frames drain in injection order (FIFO handoffs)."""
+        try:
+            item = self.qs[-1].get(timeout=timeout)
+        except queue.Empty:
+            self._stall_unwind()   # raises
+        if item is _FAILED or item is None:
+            err = self.errors[0] if self.errors else RuntimeError(
+                "pipeline closed while frames were in flight"
+            )
+            raise err
+        frame, payload, end_t, _scale, _rid = item
+        self._done_t[frame] = end_t
+        return frame, payload, end_t
+
+    def _stall_unwind(self):
+        """Mirror of ``run``'s deadlock-as-detection recovery: flag the
+        error so stages drain, abort in-flight cores, flush the drain
+        queue, join, and raise with a diagnosis."""
+        err = RuntimeError(
+            "pipeline stalled: no frame completed in time "
+            f"(drained {len(self._done_t)}/{self._frames_in}; a stage "
+            "thread is wedged -- serialized schedule or stuck prefetch)"
+        )
+        self.errors.append(err)
+        with self.ex._active_lock:
+            cores = list(self.ex._live_cores.values())
+        for c in cores:
+            c.abort(err)
+        self.qs[0].put(None)
+        deadline = time.monotonic() + 60.0
+        while time.monotonic() < deadline:
+            try:
+                if self.qs[-1].get(timeout=5.0) is None:
+                    break
+            except queue.Empty:
+                pass
+        for t in self.threads:
+            t.join(timeout=5.0)
+        self._closed = True
+        raise err from None
+
+    def close(self, outputs: Optional[List[Any]] = None) -> PipelineReport:
+        """Shut the pipeline down and build the report.  Raises the
+        first stage error if any frame failed."""
+        if not self._closed:
+            self._closed = True
+            self.qs[0].put(None)
+            deadline = time.monotonic() + 120.0
+            while time.monotonic() < deadline:
+                try:
+                    item = self.qs[-1].get(timeout=5.0)
+                except queue.Empty:
+                    continue
+                if item is None:
+                    break
+                if item is _FAILED:
+                    continue
+                frame, _payload, end_t, _scale, _rid = item
+                self._done_t[frame] = end_t   # owner never collected it
+            for t in self.threads:
+                t.join(timeout=60.0)
+            self._wall = time.perf_counter() - self._t0
+        if self.errors:
+            raise self.errors[0]
+        n = self._frames_in
+        done_t = [self._done_t.get(f, 0.0) for f in range(n)]
+        outs = outputs if outputs is not None else [None] * n
+        return self.ex._report(outs, done_t, self.traces, wall_s=self._wall)
+
+    def abort(self) -> None:
+        """Best-effort close that never raises (error-path cleanup)."""
+        try:
+            self.close()
+        except BaseException:
+            pass
+
+
 class StagePipelineExecutor:
     """Run all K stages of a :class:`PartitionedPlan` concurrently.
 
@@ -243,42 +417,54 @@ class StagePipelineExecutor:
         )
         worker.start()
         t_cursor = 0.0
+        last_round = None
         while True:
             item = in_q.get()
             if item is None:
                 break
+            if item is _FAILED:
+                out_q.put(_FAILED)   # propagate so a blocked get() wakes
+                continue
             if errors:
                 continue    # some stage failed: drain upstream, don't work
-            frame, payload, ready_t = item
+            frame, payload, ready_t, scale, round_id = item
             if k == 0 and self.stage_meshes is not None:
                 payload = _place_on_mesh(payload, self.stage_meshes[0])
             self._enter_frame()
             # inbound handoff: the activation transfer overlaps the
             # previous frame's compute (DMA), so it delays *arrival*,
             # not the stage clock.
-            arrival = ready_t + (stage.handoff_in_s if k else 0.0)
+            arrival = ready_t + (stage.handoff_in_s * scale if k else 0.0)
             start = max(t_cursor, arrival)
             if trace.frames == 0:
                 trace.first_start_t = start
             else:
                 trace.starve_s += max(0.0, arrival - t_cursor)
 
-            core = StageStreamCore(
-                costs=costs,
-                capacity=stage.pu.fast_mem_bytes,
-                issue_order=issue,
-                fetch=lambda j: self.fetch(k, j, names[j]),
-                names=names,
-            )
-            with self._active_lock:
-                self._live_cores[k] = core    # stall recovery aborts these
-            jobs.put(core)
+            # the weight-streaming tile loop runs once per *round*: lane
+            # groups of the same round reuse the weights the first group
+            # streamed in, so only that group pays the fetch sequence
+            # (frames injected via run() carry round_id == frame, which
+            # keeps the legacy one-tile-loop-per-frame behaviour)
+            stream_tiles = round_id != last_round
+            core = None
             carry = payload
             try:
-                for i in range(len(costs)):
-                    w = core.acquire(i)
-                    carry = self.run_tile(k, i, w, carry)
-                    core.release(i)
+                if stream_tiles:
+                    core = StageStreamCore(
+                        costs=costs,
+                        capacity=stage.pu.fast_mem_bytes,
+                        issue_order=issue,
+                        fetch=lambda j: self.fetch(k, j, names[j]),
+                        names=names,
+                    )
+                    with self._active_lock:
+                        self._live_cores[k] = core  # stall recovery aborts
+                    jobs.put(core)
+                    for i in range(len(costs)):
+                        w = core.acquire(i)
+                        carry = self.run_tile(k, i, w, carry)
+                        core.release(i)
                 if self.run_stage is not None:
                     # the real per-frame compute: fold the stage's layer
                     # slice over the inbound activations
@@ -289,119 +475,82 @@ class StagePipelineExecutor:
                     # hand the activations to the next stage's submesh
                     carry = _place_on_mesh(carry, self.stage_meshes[k + 1])
             except BaseException as e:
-                core.abort(e)       # unblock this stage's prefetch worker
+                if core is not None:
+                    core.abort(e)   # unblock this stage's prefetch worker
                 errors.append(e)
                 self._exit_frame()
+                out_q.put(_FAILED)
                 continue
+            last_round = round_id
 
-            end = start + stage.stage_s
+            end = start + stage.stage_s * scale
             t_cursor = end
             trace.frames += 1
-            trace.fetches += len(core.fetches)
-            trace.peak_resident_bytes = max(
-                trace.peak_resident_bytes, core.peak_resident_bytes
-            )
-            trace.busy_s += stage.stage_s
-            trace.stall_s += per_frame_stall
-            trace.handoff_s += stage.handoff_in_s if k else 0.0
+            if core is not None:
+                trace.fetches += len(core.fetches)
+                trace.peak_resident_bytes = max(
+                    trace.peak_resident_bytes, core.peak_resident_bytes
+                )
+                if self.record_fetch_orders:
+                    trace.fetch_orders.append(list(core.fetches))
+            trace.busy_s += stage.stage_s * scale
+            trace.stall_s += per_frame_stall * scale
+            trace.handoff_s += stage.handoff_in_s * scale if k else 0.0
             trace.last_end_t = end
-            if self.record_fetch_orders:
-                trace.fetch_orders.append(list(core.fetches))
             self._exit_frame()
-            out_q.put((frame, carry, end))
+            out_q.put((frame, carry, end, scale, round_id))
         jobs.put(None)
         worker.join(timeout=60.0)
         out_q.put(None)
 
     # -- the run ------------------------------------------------------------
 
+    def open_session(
+        self, queue_depth: Optional[int] = None
+    ) -> PipelineSession:
+        """Open a persistent :class:`PipelineSession` over this plan --
+        the overlapped staged-decode entry point (frames injected as
+        their cross-round dependencies drain)."""
+        return PipelineSession(self, queue_depth=queue_depth)
+
     def run(self, microbatches: Sequence[Any]) -> PipelineReport:
-        K = len(self.plan.stages)
         M = len(microbatches)
-        with self._active_lock:
-            self._active = 0
-            self._max_active = 0
-            self._live_cores.clear()
-        traces = [
-            StageTrace(stage=k, pu=s.pu.name)
-            for k, s in enumerate(self.plan.stages)
-        ]
         if M == 0:
+            traces = [
+                StageTrace(stage=k, pu=s.pu.name)
+                for k, s in enumerate(self.plan.stages)
+            ]
             return self._report([], [], traces, wall_s=0.0)
 
-        # qs[k] feeds stage k; qs[K] is the drain.  Bounded queues are the
-        # double-buffered inter-stage activation buffers (backpressure).
-        qs = [queue.Queue(maxsize=self.queue_depth) for _ in range(K + 1)]
-        errors: List[BaseException] = []
-        threads = [
-            threading.Thread(
-                target=self._stage_loop,
-                args=(k, qs[k], qs[k + 1], traces[k], errors),
-                name=f"stage-{k}", daemon=True,
-            )
-            for k in range(K)
-        ]
-        t0 = time.perf_counter()
-        for t in threads:
-            t.start()
+        session = PipelineSession(self)
 
         def inject():
-            # all microbatches are available at t=0; the bounded queue
-            # paces actual injection to the pipeline's intake rate
-            for f, payload in enumerate(microbatches):
-                qs[0].put((f, payload, 0.0))
-            qs[0].put(None)
+            # all microbatches are available at t=0; the bounded stage-0
+            # queue paces actual injection to the pipeline's intake rate
+            try:
+                for payload in microbatches:
+                    session.put(payload)
+            except BaseException:
+                pass          # a stage failed: the drain loop raises it
 
         injector = threading.Thread(target=inject, name="inject", daemon=True)
         injector.start()
 
         outputs: List[Any] = [None] * M
-        done_t = [0.0] * M
-        while True:
-            try:
+        try:
+            for _ in range(M):
                 # generous bound: a healthy pipeline delivers frames
                 # continuously; hitting it means a stage wedged (the
                 # deadlock-as-detection failure mode) -- fail fast with
                 # a diagnosis instead of hanging the CI job
-                item = qs[K].get(timeout=300.0)
-            except queue.Empty:
-                err = RuntimeError(
-                    "pipeline stalled: no frame completed in 300s "
-                    f"(collected {sum(o is not None for o in outputs)}/{M}; "
-                    "a stage thread is wedged -- serialized schedule or "
-                    "stuck prefetch)"
-                )
-                # unwind instead of leaking wedged threads: flag the
-                # error so stages switch to drain mode, abort in-flight
-                # cores (wakes acquire + prefetch cond.waits), and
-                # consume the drain queue so blocked puts upstream free
-                errors.append(err)
-                with self._active_lock:
-                    cores = list(self._live_cores.values())
-                for c in cores:
-                    c.abort(err)
-                deadline = time.monotonic() + 60.0
-                while time.monotonic() < deadline:
-                    try:
-                        if qs[K].get(timeout=5.0) is None:
-                            break
-                    except queue.Empty:
-                        pass
-                for t in threads:
-                    t.join(timeout=5.0)
-                raise err from None
-            if item is None:
-                break
-            frame, payload, end_t = item
-            outputs[frame] = payload
-            done_t[frame] = end_t
+                frame, payload, _end_t = session.get(timeout=300.0)
+                outputs[frame] = payload
+        except BaseException:
+            injector.join(timeout=60.0)
+            session.abort()
+            raise
         injector.join(timeout=60.0)
-        for t in threads:
-            t.join(timeout=60.0)
-        wall = time.perf_counter() - t0
-        if errors:
-            raise errors[0]
-        return self._report(outputs, done_t, traces, wall_s=wall)
+        return session.close(outputs=outputs)
 
     def _report(
         self,

@@ -56,7 +56,12 @@ from repro.core.aimc import AIMCNoiseModel, NoiseInjectionUnit
 from repro.core.pu import PUConfig, host_offload_config
 from repro.core.streaming import StreamingPlan, WeightTile, plan_streaming
 from repro.models import api as model_api
-from repro.plan import PartitionedPlan, SearchConfig, partition_gemms
+from repro.plan import (
+    PartitionedPlan,
+    SearchConfig,
+    partition_gemms,
+    snap_boundaries_nonempty,
+)
 
 
 @dataclasses.dataclass
@@ -98,6 +103,18 @@ class ServeConfig:
     # handoff queues, per-stage KV cache slices); False falls back to the
     # fused single-PU decode loop with the partition kept analytic-only
     stage_decode: bool = True
+    # lane-group microbatches for the *overlapped* staged decode
+    # schedule: each decode round is split into M groups along the slot
+    # batch so stages and rounds overlap (runtime.stage_decode).
+    # 0 auto-tunes M (and the handoff queue depth) against the executed
+    # bubble at engine construction (runtime.autotune.tune_staged_decode);
+    # 1 pins the serial reference schedule (the A/B bit-identity path);
+    # >1 pins M, clamped to the largest divisor of max_batch <= the
+    # request (lane groups must tile the slot batch)
+    decode_microbatches: int = 0
+    # handoff queue depth for the staged-decode pipeline when M is
+    # pinned (auto-tune picks its own depth)
+    stage_queue_depth: int = 2
     # target fill/drain bubble fraction for the auto-tuned microbatch
     # depth when execute_partition() is called without an explicit M
     target_bubble: float = 0.10
@@ -121,6 +138,17 @@ class Request:
         if self.first_token_at is None:
             return None
         return self.first_token_at - self.submitted_at
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Time per output token after the first (decode steady state)."""
+        if self.first_token_at is None or self.done_at is None:
+            return None
+        if len(self.out_tokens) < 2:
+            return None
+        return (self.done_at - self.first_token_at) / (
+            len(self.out_tokens) - 1
+        )
 
 
 def _pow2_ceil(n: int) -> int:
@@ -276,6 +304,16 @@ class ServingEngine:
         # per-stage KV cache slices and real activation handoffs
         self._staged = None
         self._staged_live = False
+        # M > 1 keeps the decode state split into per-lane-group dicts
+        # between barriers (slicing/merging the full state every block
+        # costs more than the decode itself on small models); _state is
+        # stale while _staged_groups is set, except "key"
+        self._staged_groups: Optional[List[Dict[str, jax.Array]]] = None
+        self._staged_merged_key: Optional[jax.Array] = None
+        # jitted lane-group state split/merge (built on first use)
+        self._staged_split = None
+        self._staged_merge = None
+        self.staged_tune = None
         if (
             self.partitioned_plan is not None
             and serve_cfg.stage_decode
@@ -286,13 +324,50 @@ class ServingEngine:
             def _count_trace(kind):
                 self.trace_counts[kind] = self.trace_counts.get(kind, 0) + 1
 
+            # stages on one physical device (the single-host sim, or
+            # shared submeshes) cannot overlap real compute -- one
+            # execution stream serializes every stage.  Keep the
+            # overlapped schedule but execute each block as a single
+            # scan (StagedDecodeRunner.coalesce); distinct per-stage
+            # device sets run the threaded executor for real overlap
+            same_device = self.stage_meshes is None or self.stage_meshes_shared
             self._staged = StagedDecodeRunner(
                 cfg, self.api, params, self.partitioned_plan,
-                stage_meshes=(
-                    self.stage_meshes if not self.stage_meshes_shared else None
-                ),
+                stage_meshes=None if same_device else self.stage_meshes,
                 on_trace=_count_trace,
+                # fused into the last stage's cell: overlapped frames
+                # carry their own sample-append transition, so the
+                # coordinator thread does pure queue work
+                postdecode=self._postdecode_update,
+                coalesce=same_device,
             )
+            # close the M loop: lane-group count and handoff queue depth
+            # for the overlapped schedule come from the *executed* bubble
+            # of a functional probe block (0 = auto), or are pinned by
+            # the config (1 = the serial bit-identity reference)
+            m_req = serve_cfg.decode_microbatches
+            if m_req == 0:
+                from repro.runtime.autotune import (
+                    AutotuneConfig,
+                    tune_staged_decode,
+                )
+
+                self.staged_tune = tune_staged_decode(
+                    self.partitioned_plan, serve_cfg.max_batch,
+                    AutotuneConfig(target_bubble=serve_cfg.target_bubble),
+                )
+                self._staged.configure(
+                    n_groups=self.staged_tune.n_groups,
+                    queue_depth=self.staged_tune.queue_depth,
+                )
+            else:
+                m = max(
+                    d for d in range(1, serve_cfg.max_batch + 1)
+                    if serve_cfg.max_batch % d == 0 and d <= m_req
+                )
+                self._staged.configure(
+                    n_groups=m, queue_depth=serve_cfg.stage_queue_depth
+                )
         if serve_cfg.stream_pu is not None and not serve_cfg.stream_pus:
             self.streaming_plan = plan_model_streaming(
                 cfg, serve_cfg.stream_pu,
@@ -367,20 +442,34 @@ class ServingEngine:
                         jnp.ones((nb,), jnp.int32),
                     )
         if self._staged is not None:
-            # staged decode has no pow2 ladder (one pipeline traversal
-            # per round): warm the per-stage cells and the state update
-            # on throwaway cache slices, then drop them.  The state is
-            # *kept* -- no lane is active, so the transition is the
-            # identity except for the PRNG key, which advances exactly
-            # like a live round (the warmup contract above)
-            self._staged.load_cache(self._cache)
-            logits = self._staged.decode_round(
-                self._state["tokens"], self._state["pos"]
-            )
-            self._state = self._staged_update(self._state, logits)
+            # warm the per-stage cells and the state update at the live
+            # schedule's lane-group width on throwaway cache slices,
+            # then drop them.  The state is *kept* -- no lane is active,
+            # so the transition is the identity except for the PRNG key,
+            # which advances exactly like a live round (the warmup
+            # contract above).  The first block is forced through the
+            # threaded executor: its per-frame virtual clock is
+            # cross-checked against the overlapped recurrence
+            # (clock_ok), which the coalesced fast path then inherits
+            self._staged_decode_block(2, force_threaded=True)
+            if self._staged.coalesce and self._staged.n_groups > 1:
+                # the coalesced path compiles one scan per pow2 block
+                # length, like the fused single-PU ladder
+                R = 1
+                while R <= sc.max_decode_block:
+                    self._staged_decode_block(R)
+                    R *= 2
+            self._staged_sync_state()
+            # compile the barrier transform (slices -> master cache)
+            # too: the first admission would otherwise pay it live
+            self._staged.export_cache()
+            self._staged.flush()
             self._staged.stage_caches = None
             self._staged_live = False
             self._staged.rounds_executed = 0
+            self._staged.virtual_busy_s = 0.0
+            self._staged.virtual_span_s = 0.0
+            self._staged.last_report = None
             return
         R = 1
         while R <= sc.max_decode_block:
@@ -431,9 +520,13 @@ class ServingEngine:
         """Sample-append bookkeeping after one decode round's logits:
         the single state transition shared by the fused device block and
         the staged per-round loop, so both paths terminate, append, and
-        thread the PRNG identically."""
+        thread the PRNG identically.  Width-polymorphic: the lane count
+        comes from the state, so the same transition serves the full
+        slot batch and a 1/M lane-group slice (every operation is
+        per-lane, which is why lane-group splitting preserves greedy
+        bit-identity)."""
         sc = self.serve_cfg
-        lane = jnp.arange(sc.max_batch)
+        lane = jnp.arange(state["active"].shape[0])
         key, tok = self._sample_device(state["key"], logits)
         act = state["active"]
         acti = act.astype(jnp.int32)
@@ -493,23 +586,99 @@ class ServingEngine:
         )
         return cache, state
 
-    def _staged_decode_block(self, n_rounds: int):
-        """``n_rounds`` true per-stage decode rounds: each round's hidden
-        state flows through the stage pipeline (every stage running its
-        model-layer slice against its own KV cache slice on its submesh),
-        then the shared ``_postdecode_update`` transition applies -- so
-        greedy streams are bit-identical to the fused single-PU block."""
+    def _staged_decode_block(self, n_rounds: int, force_threaded: bool = False):
+        """``n_rounds`` true per-stage decode rounds: hidden states flow
+        through the stage pipeline (every stage running its model-layer
+        slice against its own KV cache slice on its submesh), then the
+        shared ``_postdecode_update`` transition applies -- so greedy
+        streams are bit-identical to the fused single-PU block.
+
+        With ``n_groups == 1`` each round is one full-batch frame (the
+        serial A/B reference).  With M > 1 the decode state is split
+        into M lane-group slices and the rounds run *overlapped*
+        (``StagedDecodeRunner.decode_block``): stage s computes group g
+        while stage s-1 computes g+1, and round r+1 of a group enters
+        the pipeline the moment round r of that group drains.  Every
+        state operation is per-lane (sampling is per-lane argmax under
+        greedy), so the merged stream is unchanged; the PRNG key is the
+        only cross-lane state and is chained per group, which greedy
+        never consumes -- temperature sampling stays deterministic but
+        draws a different (per-group) stream than the fused loop."""
         runner = self._staged
         if runner.bound_params is not self.params:
             runner.rebind(self.params)       # e.g. after an NIU refresh
         if not self._staged_live:
             runner.load_cache(self._cache)
             self._staged_live = True
-        for _ in range(n_rounds):
-            logits = runner.decode_round(
-                self._state["tokens"], self._state["pos"]
-            )
-            self._state = self._staged_update(self._state, logits)
+        M = runner.n_groups
+        if M == 1:
+            for _ in range(n_rounds):
+                logits = runner.decode_round(
+                    self._state["tokens"], self._state["pos"]
+                )
+                self._state = self._staged_update(self._state, logits)
+            return
+        if self._staged_groups is None:
+            if self._staged_split is None:
+                sc = self.serve_cfg
+                temp = sc.temperature > 0
+                gsz = sc.max_batch // M
+
+                # jitted (like the merge below): eager slices would
+                # re-specialize against the donated block outputs'
+                # layouts at every barrier, costing fresh compiles
+                def _split(state):
+                    if temp:
+                        keys = jax.random.split(state["key"], M + 1)
+                        new_key, gkeys = keys[0], list(keys[1:])
+                    else:
+                        # greedy never consumes the key, but the staged
+                        # cells donate their group's state -- each group
+                        # needs its own buffer, not M references to the
+                        # master key
+                        new_key = state["key"]
+                        gkeys = [state["key"] + 0 for _ in range(M)]
+                    groups = []
+                    for i in range(M):
+                        gs = {
+                            k: v[i * gsz:(i + 1) * gsz]
+                            for k, v in state.items() if k != "key"
+                        }
+                        gs["key"] = gkeys[i]
+                        groups.append(gs)
+                    return new_key, groups
+
+                self._staged_split = jax.jit(_split)
+            new_key, groups = self._staged_split(self._state)
+            self._staged_groups = groups
+            self._staged_merged_key = new_key
+        runner.decode_block(
+            self._staged_groups, n_rounds, force_threaded=force_threaded
+        )
+
+    def _staged_sync_state(self):
+        """Merge the per-lane-group decode states back into the master
+        ``_state`` (lane groups rejoin on axis 0 in group order) -- the
+        state half of the round-boundary barrier.  The merged PRNG key
+        is the head of the split that seeded the groups, so a fixed
+        warmup + traffic sequence stays deterministic."""
+        groups = self._staged_groups
+        if groups is None:
+            return
+        if self._staged_merge is None:
+
+            def _merge(groups):
+                return {
+                    k: jnp.concatenate([gr[k] for gr in groups], axis=0)
+                    for k in groups[0] if k != "key"
+                }
+
+            self._staged_merge = jax.jit(_merge)
+        merged = self._staged_merge(groups)
+        merged["key"] = self._staged_merged_key
+        self._state = merged
+        self._staged_groups = None
+        self._staged_merged_key = None
 
     def _admit_impl(self, params, cache, state, tokens, lengths, slots, max_new):
         """Batched prefill of one length bucket + on-device admission:
@@ -576,9 +745,13 @@ class ServingEngine:
         if not admits:
             return
         if self._staged is not None and self._staged_live:
-            # admission scatters into the master cache: fold the staged
-            # runner's per-stage slices back first so no decode state is
-            # lost (re-sliced lazily at the next staged block)
+            # the round-boundary barrier: admission mutates slot
+            # membership, so fold the per-lane-group decode states and
+            # the staged runner's per-stage cache slices back into the
+            # master layout first (export_cache also flushes the
+            # overlapped session; everything is re-sliced lazily at the
+            # next staged block, which re-pays the fill bubble there)
+            self._staged_sync_state()
             self._cache = self._staged.export_cache()
             self._staged_live = False
         groups: Dict[int, List[Tuple[int, Request, np.ndarray]]] = {}
@@ -663,8 +836,21 @@ class ServingEngine:
             )
         self.rounds += R
 
-        active = np.asarray(self._state["active"])
-        out_len = np.asarray(self._state["out_len"])
+        groups = self._staged_groups
+        if groups is not None:
+            # per-group scalar sync: the decode state stays split
+            # between barriers, so read the per-lane flags group-wise
+            # instead of merging the whole state every block
+            gsize = sc.max_batch // len(groups)
+            active = np.concatenate(
+                [np.asarray(gr["active"]) for gr in groups]
+            )
+            out_len = np.concatenate(
+                [np.asarray(gr["out_len"]) for gr in groups]
+            )
+        else:
+            active = np.asarray(self._state["active"])
+            out_len = np.asarray(self._state["out_len"])
         now = time.perf_counter()
         for i, req in enumerate(self._slots):
             if req is None:
@@ -672,9 +858,12 @@ class ServingEngine:
             self._slot_emitted[i] = int(out_len[i])
             if not active[i]:
                 n = int(out_len[i])
-                req.out_tokens = [
-                    int(t) for t in np.asarray(self._state["out_buf"][i, :n])
-                ]
+                if groups is not None:
+                    gi, row = divmod(i, gsize)
+                    buf = groups[gi]["out_buf"][row, :n]
+                else:
+                    buf = self._state["out_buf"][i, :n]
+                req.out_tokens = [int(t) for t in np.asarray(buf)]
                 req.done_at = now
                 self.completed.append(req)
                 self._slots[i] = None
@@ -893,13 +1082,36 @@ class ServingEngine:
                     else len(self.mesh.devices.ravel())
                 )
             if self._staged is not None:
+                # fold any open overlapped session into the virtual
+                # account so the reported bubble covers every block
+                self._staged.flush()
                 out["stage_decode"] = 1.0
                 out["stage_decode_rounds"] = float(
                     self._staged.rounds_executed
                 )
                 out["stage_decode_clock_ok"] = float(self._staged.clock_ok)
+                out["stage_decode_coalesced"] = float(self._staged.coalesce)
+                out["stage_decode_microbatches"] = float(
+                    self._staged.n_groups
+                )
+                out["stage_decode_queue_depth"] = float(
+                    self._staged.queue_depth
+                )
+                out["stage_decode_bubble"] = self._staged.bubble_fraction
                 for k, (a, b) in enumerate(self._staged.ranges):
                     out[f"stage{k}_decode_layers"] = float(b - a)
+                if self.staged_tune is not None:
+                    t = self.staged_tune
+                    out["stage_decode_autotuned"] = 1.0
+                    out["stage_decode_autotune_target_bubble"] = (
+                        t.target_bubble
+                    )
+                    out["stage_decode_autotune_within_tolerance"] = float(
+                        t.within_tolerance
+                    )
+                    out["stage_decode_autotune_trials"] = float(
+                        len(t.trials)
+                    )
         return out
 
 
@@ -1019,9 +1231,14 @@ def attach_decode_ranges(
     resulting boundaries are snapped to the family's allowed slice
     points (``ModelAPI.decode_slice_points`` -- e.g. hybrid boundaries
     must be group-aligned) and kept monotone, so the ranges tile
-    ``[0, n_layers)`` exactly.  A stage whose snapped range is empty
-    passes hidden states through untouched (possible when K approaches
-    or exceeds the layer count)."""
+    ``[0, n_layers)`` exactly.  Snapping is non-empty-preserving
+    (:func:`repro.plan.partition.snap_boundaries_nonempty`): whenever
+    the slice grid has at least K-1 interior points, every stage owns
+    >= 1 layer -- the unembed-heavy tail of the GEMM sequence would
+    otherwise pull the last boundary onto ``n_layers`` and leave a
+    degenerate empty stage idling through every decode round.  Only
+    when K exceeds what the grid can host does a stage go empty and
+    pass hidden states through untouched."""
     api = model_api.get_api(cfg)
     pts = sorted(api.decode_slice_points(cfg))
     L = cfg.n_layers
@@ -1035,11 +1252,7 @@ def attach_decode_ranges(
             sum(1 for l in range(L) if first_gemm.get(l, 1 << 60) < gs)
         )
     bounds.append(L)
-    snapped = [0]
-    for b in bounds[1:-1]:
-        p = min(pts, key=lambda q: (abs(q - b), q))
-        snapped.append(min(max(p, snapped[-1]), L))
-    snapped.append(L)
+    snapped = [0] + snap_boundaries_nonempty(bounds[1:-1], pts, L) + [L]
     stages = tuple(
         dataclasses.replace(
             s,

@@ -14,28 +14,76 @@ stages carry ``decode_layer_start/stop`` (attached by
   the bound params change, e.g. an AIMC NIU refresh);
 - per-stage **KV/state caches** are sliced from the engine's master
   cache when a decode block starts and concatenated back before the next
-  admission scatters fresh lanes (``load_cache`` / ``export_cache``);
-- each decode round pushes the live ``(B, 1, d_model)`` hidden state
-  through :class:`runtime.pipeline_exec.StagePipelineExecutor` -- the
-  first stage embeds the token batch, every stage folds its layer slice
-  (updating its cache slice in place), the last stage unembeds to
-  logits.  The executor's tile loop keeps the weight-streaming account
-  and the virtual clock, which is cross-checked per round against the
-  plan's pipeline recurrence (``clock_ok``).
+  admission scatters fresh lanes (``load_cache`` / ``export_cache``).
+  With lane groups (``n_groups > 1``) each stage's slice is further
+  split along the *lane* axis into M static per-group slices, so the
+  same jitted stage cell serves every group;
+- decode rounds push live hidden states through
+  :class:`runtime.pipeline_exec.StagePipelineExecutor`: the first stage
+  embeds the token batch, every stage folds its layer slice (updating
+  its cache slice in place), the last stage unembeds to logits.
 
-The composition is bit-identical to the fused single-PU
-``decode_step`` by construction: every family implements ``decode_step``
-as exactly the one-stage composition of the same entry points.
+Two schedules drive the executor:
+
+- :meth:`decode_round` -- the **serial M=1 reference**: one full-batch
+  frame per round through its own pipeline run, with separate
+  embed/stage/unembed cells and the post-decode update applied by the
+  caller.  All fill bubble, but structurally bit-identical to the fused
+  single-PU ``decode_step`` by construction (every family implements
+  ``decode_step`` as exactly the one-stage composition of the same
+  entry points).  Kept as the A/B reference the way ``--host-sampling``
+  is.
+- :meth:`decode_block` -- the **overlapped schedule**: each round is M
+  lane-group frames flowing through a *persistent*
+  :class:`~repro.runtime.pipeline_exec.PipelineSession` that stays open
+  across consecutive blocks (between admission barriers), with round
+  r+1 of a group entering stage 0 as soon as round r of that group
+  drains (its sampled token is the next round's input).  Stage s
+  computes group g while stage s-1 computes g+1 *and* rounds overlap
+  across the boundary, so the fill bubble is paid once per barrier
+  interval, not once per round or block.  The hot path is two fused
+  jitted cells per frame -- embed folds into the first stage's cell and
+  unembed + the post-decode state transition fold into the last
+  stage's -- dispatched from the stage threads; the coordinator does
+  pure queue work.  Greedy sampling is per-lane argmax, so splitting
+  the batch along lanes preserves bit-identity with the fused loop on
+  dense configs.
+
+Both schedules keep the executor's weight-streaming account and virtual
+clock; the clock is cross-checked per frame against the plan's
+recurrence (``pipeline_events`` / ``decode_pipeline_events`` --
+``clock_ok``), with the persistent session's clock rebased by the last
+drain time at each block boundary (the host sync between blocks is a
+true barrier, so the rebased recurrence is exact).
+
+When every stage lives on the *same* physical device (the single-host
+simulation, or shared stage submeshes), the threaded schedule cannot
+overlap anything real: one execution stream serializes all stage
+compute, and each extra lane-group frame re-traverses the full weight
+working set, so wall clock strictly degrades with M while the virtual
+clock improves.  ``coalesce=True`` keeps the overlapped *schedule*
+(frame order, virtual account, recurrence cross-check at warmup) but
+executes each block as one jitted ``lax.scan`` over rounds whose body
+chains every stage's cell back-to-back per lane group --
+numerically the same staged computation (per-stage param/cache
+slices), dispatched once per block instead of twice per frame.  The
+virtual account for coalesced blocks is the analytic recurrence
+itself, which the threaded warmup block has already validated
+(``clock_ok``).
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.plan.partition import PartitionedPlan
-from repro.runtime.pipeline_exec import PipelineReport, StagePipelineExecutor
+from repro.runtime.pipeline_exec import (
+    PipelineReport,
+    PipelineSession,
+    StagePipelineExecutor,
+)
 
 
 class StagedDecodeRunner:
@@ -43,7 +91,16 @@ class StagedDecodeRunner:
 
     ``on_trace(kind)`` (optional) is called whenever one of the runner's
     jitted cells traces, so the owning engine's retrace accounting covers
-    the staged path too.
+    the staged path too.  ``n_groups`` is the lane-group microbatch
+    count M (1 = the serial reference schedule); ``configure`` changes
+    it between blocks (caches must be re-loaded after).
+
+    ``postdecode(state, logits) -> state`` (optional) is the pure
+    per-lane post-decode transition; when given, it is fused into the
+    last stage's jitted cell so the overlapped schedule's frames carry
+    their own state update (2 dispatches per frame instead of 5, none
+    on the coordinator thread).  Without it, :meth:`decode_block`
+    applies its ``update`` callback on the last-stage thread instead.
     """
 
     def __init__(
@@ -54,8 +111,11 @@ class StagedDecodeRunner:
         plan: PartitionedPlan,
         *,
         stage_meshes: Optional[Sequence[Any]] = None,
+        n_groups: int = 1,
         queue_depth: int = 2,
         on_trace=None,
+        postdecode: Optional[Callable[[Any, Any], Any]] = None,
+        coalesce: bool = False,
     ):
         self.cfg = cfg
         self.api = api
@@ -84,6 +144,7 @@ class StagedDecodeRunner:
                 f"{L} layers"
             )
         self._on_trace = on_trace or (lambda kind: None)
+        self._postdecode = postdecode
 
         def _embed(p, tokens, pos):
             self._on_trace("decode")
@@ -97,17 +158,67 @@ class StagedDecodeRunner:
             self._on_trace("decode")
             return api.decode_unembed(cfg, p, h)
 
+        # the serial M=1 reference path keeps separate cells (the same
+        # jit-boundary structure the staged path originally shipped with)
         self._embed_fn = jax.jit(_embed)
-        self._stage_fn = jax.jit(_stage)
+        self._stage_fn = jax.jit(_stage, donate_argnums=(2,))
         self._unembed_fn = jax.jit(_unembed)
+
+        # fused cells for the overlapped schedule: embed belongs to the
+        # first stage, unembed (and the post-decode transition, when
+        # bound) to the last -- one dispatch per (stage, frame)
+        def _cell_first(p, sp, sc, tokens, pos):
+            self._on_trace("decode")
+            h = api.decode_embed(cfg, p, tokens, pos)
+            return api.decode_stage(cfg, sp, h, sc, pos)
+
+        def _cell_last(p, sp, x, sc, state):
+            self._on_trace("decode")
+            h, sc = api.decode_stage(cfg, sp, x, sc, state["pos"])
+            logits = api.decode_unembed(cfg, p, h)
+            if postdecode is not None:
+                return postdecode(state, logits), sc
+            return logits, sc
+
+        def _cell_single(p, sp, sc, state):
+            self._on_trace("decode")
+            h = api.decode_embed(cfg, p, state["tokens"], state["pos"])
+            h, sc = api.decode_stage(cfg, sp, h, sc, state["pos"])
+            logits = api.decode_unembed(cfg, p, h)
+            if postdecode is not None:
+                return postdecode(state, logits), sc
+            return logits, sc
+
+        # cache slices (and, when the transition is fused, the group
+        # state) are donated: like the fused single-PU block, the KV
+        # slice lives in the same device buffers round after round
+        # instead of being copied through every scatter.  Without a
+        # bound postdecode the cells return logits and the caller still
+        # owns the state, so only the cache is donated.
+        fused = postdecode is not None
+        self._cell_first = jax.jit(_cell_first, donate_argnums=(2,))
+        self._cell_last = jax.jit(
+            _cell_last, donate_argnums=(3, 4) if fused else (3,)
+        )
+        self._cell_single = jax.jit(
+            _cell_single, donate_argnums=(2, 3) if fused else (2,)
+        )
 
         self.bound_params = None
         self.stage_params: List[Any] = []
         self.rebind(params)
-        self.stage_caches: Optional[List[Any]] = None
+        # stage_caches[k][g]: stage k's cache slice for lane group g
+        # (n_groups == 1 keeps the whole stage slice in group 0)
+        self.stage_caches: Optional[List[List[Any]]] = None
+        self.n_groups = int(n_groups)
+        self.queue_depth = int(queue_depth)
         self.rounds_executed = 0
         self.clock_ok = True
         self.last_report: Optional[PipelineReport] = None
+        # cumulative virtual account across rounds/blocks, so the
+        # executed bubble of a whole serving run is reportable
+        self.virtual_busy_s = 0.0
+        self.virtual_span_s = 0.0
         self._executor = StagePipelineExecutor(
             plan,
             run_stage=self._run_stage,
@@ -116,6 +227,62 @@ class StagedDecodeRunner:
         )
         # the M=1 recurrence: one frame through all K stages
         self._expected_done_t = float(plan.pipeline_events(1)[-1, 0])
+        # (n_groups, n_rounds) -> last-stage drain times of one
+        # overlapped block's recurrence; block shapes come from a small
+        # pow2 ladder, so the cache stays tiny
+        self._expected_block: Dict[Tuple[int, int], Any] = {}
+        # the persistent overlapped session (None between barriers):
+        # _session_t is the virtual clock offset (last drain end),
+        # _session_rounds the global round counter that keeps the
+        # per-round tile loop amortization monotone across blocks
+        self._session: Optional[PipelineSession] = None
+        self._session_t = 0.0
+        self._session_rounds = 0
+        # block-mode context read by _run_stage from the stage threads
+        # (queue handoffs order every access -- see decode_block)
+        self._block_groups: Optional[List[Dict[str, Any]]] = None
+        self._block_update: Optional[Callable] = None
+        # single-device fast path: execute blocks as one scan per block
+        # (see module docstring); jitted block fns keyed by
+        # (n_groups, n_rounds) -- block lengths come from the engine's
+        # pow2 ladder, so the cache stays tiny
+        self.coalesce = bool(coalesce)
+        self._co_fns: Dict[Tuple[int, int], Any] = {}
+        # coalesced rounds / span not yet folded into the virtual
+        # account; the span accrues per block because the host sync
+        # between blocks rebases the next block's round-0 frames at the
+        # previous block's last drain (same mini-barrier the threaded
+        # session pays)
+        self._co_rounds = 0
+        self._co_span = 0.0
+        # the barrier transforms (master cache -> per-stage/per-group
+        # slices and back) are jitted: the eager ops would re-specialize
+        # against the donated block outputs' layouts at *every* barrier
+        # (tens of ms of recompilation per admission); compiled once at
+        # warmup they dispatch in microseconds
+        self._load_fns: Dict[int, Any] = {}
+        self._export_fn = None
+
+    # -- configuration ------------------------------------------------------
+
+    def configure(
+        self,
+        n_groups: Optional[int] = None,
+        queue_depth: Optional[int] = None,
+    ) -> None:
+        """Change the lane-group count / handoff queue depth (e.g. from
+        the staged-decode autotuner).  Any open session is flushed and
+        loaded caches are dropped: the group split is part of the cache
+        layout."""
+        self.flush()
+        if n_groups is not None:
+            if n_groups < 1:
+                raise ValueError("n_groups must be >= 1")
+            self.n_groups = int(n_groups)
+        if queue_depth is not None:
+            self.queue_depth = int(queue_depth)
+            self._executor.queue_depth = int(queue_depth)
+        self.stage_caches = None
 
     # -- param/cache residency ---------------------------------------------
 
@@ -128,41 +295,149 @@ class StagedDecodeRunner:
         ]
 
     def load_cache(self, cache) -> None:
-        """Slice the engine's master cache into per-stage cache slices."""
-        self.stage_caches = [
-            self.api.slice_cache(self.cfg, cache, r) for r in self.ranges
-        ]
+        """Slice the engine's master cache into per-stage, per-lane-group
+        cache slices.  Cache leaves are layer-leading ``(L, B, ...)``:
+        stage slices cut axis 0, lane groups cut axis 1 into M static
+        chunks so every group's stage cell compiles once at the group
+        width."""
+        self.flush()
+        M = self.n_groups
+        lanes = {
+            leaf.shape[1] for leaf in jax.tree.leaves(cache)
+            if getattr(leaf, "ndim", 0) >= 2
+        }
+        B = max(lanes) if lanes else 0
+        if M > 1 and B % M:
+            raise ValueError(
+                f"n_groups={M} does not divide the {B}-lane slot batch"
+            )
+        fn = self._load_fns.get(M)
+        if fn is None:
+            api, cfg, ranges = self.api, self.cfg, self.ranges
+
+            def _load(cache):
+                stage_slices = [
+                    api.slice_cache(cfg, cache, r) for r in ranges
+                ]
+                if M == 1:
+                    return [[s] for s in stage_slices]
+
+                def _group(leaf, i):
+                    g = leaf.shape[1] // M
+                    return leaf[:, i * g:(i + 1) * g]
+
+                return [
+                    [
+                        jax.tree.map(lambda leaf: _group(leaf, i), s)
+                        for i in range(M)
+                    ]
+                    for s in stage_slices
+                ]
+
+            fn = jax.jit(_load)
+            self._load_fns[M] = fn
+        self.stage_caches = fn(cache)
 
     def export_cache(self):
-        """Concatenate the per-stage cache slices back into the master
-        layout (each family's cache leaves are layer-leading, so stage
-        slices concatenate on axis 0 in stage order)."""
+        """Concatenate the per-stage (and per-lane-group) cache slices
+        back into the master layout: lane groups rejoin on axis 1 in
+        group order, stage slices on axis 0 in stage order.  Flushes the
+        overlapped session first -- exporting IS the round-boundary
+        barrier admissions synchronize on."""
+        self.flush()
         if self.stage_caches is None:
             raise ValueError("no stage caches loaded")
-        return jax.tree.map(
-            lambda *leaves: jnp.concatenate(leaves, axis=0),
-            *self.stage_caches,
-        )
+        if self._export_fn is None:
 
-    # -- the decode round ---------------------------------------------------
+            def _export(stage_caches):
+                merged = [
+                    groups[0] if len(groups) == 1 else jax.tree.map(
+                        lambda *leaves: jnp.concatenate(leaves, axis=1),
+                        *groups,
+                    )
+                    for groups in stage_caches
+                ]
+                return jax.tree.map(
+                    lambda *leaves: jnp.concatenate(leaves, axis=0),
+                    *merged,
+                )
+
+            self._export_fn = jax.jit(_export)
+        return self._export_fn(self.stage_caches)
+
+    # -- the decode schedules -----------------------------------------------
 
     def _run_stage(self, k: int, payload):
-        # the frame payload IS the inter-stage handoff: (tokens, pos)
-        # entering stage 0, (hidden, pos) between stages, (logits, pos)
-        # draining -- pos rides along because every stage's KV scatter
-        # needs the per-lane positions
-        x, pos = payload
+        K = len(self.ranges)
+        if self._block_groups is None:
+            # legacy / M=1 reference frame: the payload IS the
+            # inter-stage handoff -- (tokens, pos, g) entering stage 0,
+            # (hidden, pos, g) between stages, (logits, pos, g)
+            # draining.  pos rides along because every stage's KV
+            # scatter needs the per-lane positions, g selects the
+            # stage's lane-group cache slice
+            x, pos, g = payload
+            if k == 0:
+                x = self._embed_fn(self.bound_params, x, pos)
+            x, self.stage_caches[k][g] = self._stage_fn(
+                self.stage_params[k], x, self.stage_caches[k][g], pos
+            )
+            if k == K - 1:
+                x = self._unembed_fn(self.bound_params, x)
+            return (x, pos, g)
+
+        # overlapped block mode: stage 0 frames carry only the group
+        # index -- the group's decode state lives in _block_groups[g],
+        # written solely by the last stage and re-read by stage 0 one
+        # queue round-trip later (the handoff queues order every
+        # cross-thread access)
         if k == 0:
-            x = self._embed_fn(self.bound_params, x, pos)
-        x, self.stage_caches[k] = self._stage_fn(
-            self.stage_params[k], x, self.stage_caches[k], pos
+            g = payload
+            st = self._block_groups[g]
+            if K == 1:
+                out, self.stage_caches[0][g] = self._cell_single(
+                    self.bound_params, self.stage_params[0],
+                    self.stage_caches[0][g], st,
+                )
+                self._finish_group(g, st, out)
+                return g
+            x, self.stage_caches[0][g] = self._cell_first(
+                self.bound_params, self.stage_params[0],
+                self.stage_caches[0][g], st["tokens"], st["pos"],
+            )
+            return (x, st["pos"], g)
+        x, pos, g = payload
+        if k < K - 1:
+            x, self.stage_caches[k][g] = self._stage_fn(
+                self.stage_params[k], x, self.stage_caches[k][g], pos
+            )
+            return (x, pos, g)
+        st = self._block_groups[g]
+        out, self.stage_caches[k][g] = self._cell_last(
+            self.bound_params, self.stage_params[k], x,
+            self.stage_caches[k][g], st,
         )
-        if k == len(self.ranges) - 1:
-            x = self._unembed_fn(self.bound_params, x)
-        return (x, pos)
+        self._finish_group(g, st, out)
+        return g
+
+    def _finish_group(self, g: int, st, out) -> None:
+        """Apply the frame's state transition on the last-stage thread:
+        ``out`` is the fused new state when ``postdecode`` is bound,
+        else the logits handed to the block's ``update`` callback."""
+        if self._postdecode is not None:
+            self._block_groups[g] = out
+        elif self._block_update is not None:
+            self._block_groups[g] = self._block_update(g, st, out)
+        else:
+            raise ValueError(
+                "decode_block needs either a bound postdecode transition "
+                "or an update callback"
+            )
 
     def decode_round(self, tokens, pos):
-        """One staged decode round -> logits (B, V).
+        """One serial staged decode round -> logits (B, V): the M=1
+        reference schedule (one full-batch frame through all K stages,
+        its own pipeline run, all fill bubble).
 
         The token batch enters stage 0 (which embeds it), the hidden
         state flows through every stage's layer slice via the executor's
@@ -170,13 +445,238 @@ class StagedDecodeRunner:
         frame payload.  Stage caches update in place."""
         if self.stage_caches is None:
             raise ValueError("load_cache() before decode_round()")
-        report = self._executor.run([(tokens, jnp.asarray(pos, jnp.int32))])
+        if self.n_groups != 1:
+            raise ValueError(
+                "decode_round is the serial M=1 reference; use "
+                "decode_block with n_groups > 1"
+            )
+        if self._session is not None:
+            raise ValueError("flush() the overlapped session first")
+        report = self._executor.run(
+            [(tokens, jnp.asarray(pos, jnp.int32), 0)]
+        )
         self.rounds_executed += 1
         self.last_report = report
+        self.virtual_busy_s += sum(t.busy_s for t in report.stages)
+        self.virtual_span_s += report.makespan_s
         # virtual-clock cross-check: the executed event stream must
         # reproduce the plan's single-frame recurrence
         tol = 1e-9 * max(1.0, abs(self._expected_done_t))
         if abs(report.frame_done_t[0] - self._expected_done_t) > tol:
             self.clock_ok = False
-        logits, _ = report.outputs[0]
+        logits, _, _ = report.outputs[0]
         return logits
+
+    def decode_block(
+        self,
+        groups: List[Dict[str, Any]],
+        n_rounds: int,
+        update: Optional[
+            Callable[[int, Dict[str, Any], Any], Dict[str, Any]]
+        ] = None,
+        force_threaded: bool = False,
+    ) -> List[Dict[str, Any]]:
+        """``n_rounds`` overlapped rounds over M lane-group states.
+
+        ``groups[g]`` is lane group g's decode-state dict (at least
+        ``tokens`` (gsize, 1) and ``pos`` (gsize,)); the post-decode
+        transition (the constructor's ``postdecode``, or else
+        ``update(g, state_g, logits)``) runs on the last-stage thread
+        and its result's ``tokens``/``pos`` feed the group's next
+        round.  Returns the final group states (the same list, updated
+        in place).
+
+        Schedule: all M groups of round 0 are injected up front (they
+        fill the pipeline); thereafter group g of round r+1 is injected
+        the moment group g of round r drains -- the cross-round overlap.
+        The session persists across consecutive blocks: the fill bubble
+        is paid once per barrier interval (``flush`` / ``load_cache`` /
+        ``export_cache`` close it), and each block's frames rebase the
+        virtual clock by the previous block's last drain time -- the
+        host sync between blocks is a true barrier, so the rebased
+        ``PartitionedPlan.decode_pipeline_events`` recurrence stays an
+        exact cross-check (``clock_ok``).  The handoff queues are FIFO,
+        so frames drain in injection order and the block-local frame
+        index is ``i = r*M + g``.
+
+        With ``coalesce`` set (all stages on one physical device) the
+        same schedule executes as a single jitted scan per block
+        (``force_threaded=True`` overrides, e.g. for the warmup block
+        that cross-checks the virtual clock through the real
+        executor)."""
+        M = self.n_groups
+        if self.stage_caches is None:
+            raise ValueError("load_cache() before decode_block()")
+        if len(groups) != M:
+            raise ValueError(f"got {len(groups)} group states for M={M}")
+        if (
+            self.coalesce
+            and not force_threaded
+            and update is None
+            and self._postdecode is not None
+        ):
+            return self._decode_block_coalesced(groups, n_rounds)
+        scale = 1.0 / M
+        key = (M, n_rounds)
+        if key not in self._expected_block:
+            self._expected_block[key] = self.plan.decode_pipeline_events(
+                M, n_rounds, scale
+            )[-1]
+        expected = self._expected_block[key]
+
+        if self._session is None:
+            self._session = self._executor.open_session(
+                queue_depth=self.queue_depth
+            )
+            self._session_t = 0.0
+            self._session_rounds = 0
+        session = self._session
+        base = session.frames_in
+        t0 = self._session_t
+        r0 = self._session_rounds
+        self._block_groups = groups
+        self._block_update = update
+        last_end = t0
+        try:
+            for g in range(M):
+                session.put(g, ready_t=t0, scale=scale, round_id=r0)
+            for _ in range(n_rounds * M):
+                frame, g, end_t = session.get()
+                r = (frame - base) // M
+                want = t0 + float(expected[frame - base])
+                tol = 1e-9 * max(1.0, abs(want))
+                if abs(end_t - want) > tol:
+                    self.clock_ok = False
+                last_end = end_t
+                if r + 1 < n_rounds:
+                    session.put(
+                        g, ready_t=end_t, scale=scale,
+                        round_id=r0 + r + 1,
+                    )
+        except BaseException:
+            self._session = None
+            self._block_groups = None
+            self._block_update = None
+            session.abort()
+            raise
+        self._block_update = None
+        self._session_t = last_end
+        self._session_rounds += n_rounds
+        self.rounds_executed += n_rounds
+        return groups
+
+    def _co_fn(self, M: int, n_rounds: int):
+        """The jitted coalesced block for (M, n_rounds): a scan over
+        rounds whose body chains every stage's layer slice (with the
+        fused embed / unembed / post-decode transition) per lane group
+        -- the overlapped schedule's work, one dispatch per block.
+        Cache slices and group states are donated like the threaded
+        cells'."""
+        key = (M, n_rounds)
+        fn = self._co_fns.get(key)
+        if fn is not None:
+            return fn
+        api, cfg, post = self.api, self.cfg, self._postdecode
+        K = len(self.ranges)
+
+        def _block(p, sps, scs, groups):
+            self._on_trace("decode")
+
+            def body(carry, _):
+                scs, groups = carry
+                new_scs = [list(s) for s in scs]
+                new_groups = list(groups)
+                for g in range(M):
+                    st = groups[g]
+                    x = api.decode_embed(cfg, p, st["tokens"], st["pos"])
+                    for k in range(K):
+                        x, new_scs[k][g] = api.decode_stage(
+                            cfg, sps[k], x, scs[k][g], st["pos"]
+                        )
+                    logits = api.decode_unembed(cfg, p, x)
+                    new_groups[g] = post(st, logits)
+                return (
+                    tuple(tuple(s) for s in new_scs),
+                    tuple(new_groups),
+                ), None
+
+            (scs, groups), _ = jax.lax.scan(
+                body, (scs, groups), None, length=n_rounds
+            )
+            return scs, groups
+
+        fn = jax.jit(_block, donate_argnums=(2, 3))
+        self._co_fns[key] = fn
+        return fn
+
+    def _decode_block_coalesced(
+        self, groups: List[Dict[str, Any]], n_rounds: int
+    ) -> List[Dict[str, Any]]:
+        """Run one overlapped block as a single scan (see module
+        docstring).  The virtual account is the analytic recurrence,
+        folded in at :meth:`flush` -- exactly what the threaded
+        executor's clock reproduces (``clock_ok`` from the warmup
+        block)."""
+        M = self.n_groups
+        if self._session is not None:
+            # a threaded session epoch ends here: fold its account
+            # before the coalesced rounds start their own
+            self.flush()
+        fn = self._co_fn(M, n_rounds)
+        scs = tuple(tuple(s) for s in self.stage_caches)
+        new_scs, new_groups = fn(
+            self.bound_params, tuple(self.stage_params), scs, tuple(groups)
+        )
+        self.stage_caches = [list(s) for s in new_scs]
+        for g in range(M):
+            groups[g] = new_groups[g]
+        self.rounds_executed += n_rounds
+        self._co_rounds += n_rounds
+        # span folds per block: between blocks the host syncs (the
+        # engine inspects drained state), so the next block's recurrence
+        # starts with all M frames ready at the previous block's last
+        # drain -- spans of consecutive blocks simply add
+        key = (M, n_rounds)
+        if key not in self._expected_block:
+            self._expected_block[key] = self.plan.decode_pipeline_events(
+                M, n_rounds, 1.0 / M
+            )[-1]
+        self._co_span += float(self._expected_block[key][-1])
+        return groups
+
+    def flush(self) -> None:
+        """Close the persistent overlapped session (if open) and fold
+        its executed trace into the cumulative virtual account.  The
+        round-boundary barrier: admissions/evictions (which mutate slot
+        membership) and reconfiguration call this, paying the next
+        block's fill bubble exactly where the schedule requires it."""
+        if self._co_rounds:
+            # fold pending coalesced rounds analytically: M*R frames at
+            # scale 1/M give each stage R * stage_s of busy time; the
+            # span accrued per block (see _decode_block_coalesced)
+            R = self._co_rounds
+            self._co_rounds = 0
+            self.virtual_busy_s += R * sum(
+                s.stage_s for s in self.plan.stages
+            )
+            self.virtual_span_s += self._co_span
+            self._co_span = 0.0
+        session, self._session = self._session, None
+        self._block_groups = None
+        self._block_update = None
+        if session is None:
+            return
+        report = session.close()
+        self.last_report = report
+        self.virtual_busy_s += sum(t.busy_s for t in report.stages)
+        self.virtual_span_s += report.makespan_s
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Cumulative executed bubble across every round/block so far:
+        1 - busy / (K * span) over the accumulated virtual account.
+        (``flush()`` first to fold an open session.)"""
+        K = len(self.plan.stages)
+        if self.virtual_span_s <= 0:
+            return 0.0
+        return 1.0 - self.virtual_busy_s / (K * self.virtual_span_s)

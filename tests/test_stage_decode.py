@@ -320,3 +320,200 @@ def test_staged_temperature_stream_is_seed_deterministic():
     d2 = e2.run_until_drained()
     for a, b in zip(d1, d2):
         assert a.out_tokens == b.out_tokens
+
+
+# ---------------------------------------------------------------------------
+# decode partition never starves a stage when the slice grid allows
+# ---------------------------------------------------------------------------
+
+
+_FAMILY_ARCHS = (
+    "olmo-1b",          # lm
+    "whisper-medium",   # encdec
+    "mamba2-780m",      # ssm
+    "zamba2-1.2b",      # hybrid
+    "mixtral-8x7b",     # moe
+    "internvl2-26b",    # vlm
+)
+
+
+@pytest.mark.parametrize("arch", _FAMILY_ARCHS)
+@pytest.mark.parametrize("k", [2, 3])
+def test_every_stage_owns_a_layer(arch, k):
+    """Regression for the degenerate decode partition (stage_layers
+    [2, 0] in the serve bench): whenever the family's slice grid has
+    enough interior points for K stages, the snapped ranges must leave
+    every stage at least one layer.  Smoke configs whose 2-layer grid
+    cannot host K=3 get a 4-layer override -- the K-too-large case
+    keeps its own guard test above."""
+    cfg = _cfg(arch)
+    api = model_api.get_api(cfg)
+    interior = [
+        p for p in api.decode_slice_points(cfg) if 0 < p < cfg.n_layers
+    ]
+    if len(interior) < k - 1:
+        cfg = _cfg(arch, n_layers=4)
+        api = model_api.get_api(cfg)
+        interior = [
+            p for p in api.decode_slice_points(cfg) if 0 < p < cfg.n_layers
+        ]
+        assert len(interior) >= k - 1, (arch, k)
+    pplan = plan_partitioned_streaming(cfg, _pus(k), batch_tokens=4)
+    ranges = [s.decode_layers for s in pplan.stages]
+    assert all(b > a for a, b in ranges), (arch, k, ranges)
+    assert sum(b - a for a, b in ranges) == cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# overlapped schedule: lane-group microbatching + cross-round pipelining
+# ---------------------------------------------------------------------------
+
+
+def _ref_streams(cfg, params, waves, **kw):
+    """Single-PU device-loop streams for the same staggered traffic."""
+    eng = _engine(cfg, params, **kw)
+    for i, wave in enumerate(waves):
+        for p in wave:
+            eng.submit(p.copy())
+        if i + 1 < len(waves):
+            eng.step()
+    return {r.uid: r.out_tokens for r in eng.run_until_drained()}
+
+
+@pytest.mark.parametrize("k", [2, 3])
+@pytest.mark.parametrize("m", [1, 2, 4])
+def test_overlapped_decode_bit_identical_across_m(k, m):
+    """Acceptance: the overlapped staged schedule (M lane groups,
+    cross-round pipelining, persistent session / coalesced block) keeps
+    greedy streams bit-identical to the fused single-PU loop for
+    K in {2,3} x M in {1,2,4}, under staggered admissions landing
+    between rounds.  M=1 pins the serial reference schedule."""
+    cfg = _cfg("olmo-1b", n_layers=4)
+    params = _params(cfg)
+    waves = [_prompts(cfg, 4, seed=31), _prompts(cfg, 3, seed=33)]
+    kw = dict(max_batch=4, max_len=64, max_new_tokens=6, seed=0)
+    ref = _ref_streams(cfg, params, waves, **kw)
+    staged = _engine(
+        cfg, params, stream_pus=_pus(k), decode_microbatches=m, **kw
+    )
+    for i, wave in enumerate(waves):
+        for p in wave:
+            staged.submit(p.copy())
+        if i + 1 < len(waves):
+            staged.step()
+    got = {r.uid: r.out_tokens for r in staged.run_until_drained()}
+    assert got == ref
+    s = staged.stats()
+    assert s["stage_decode_microbatches"] == float(m)
+    assert s["stage_decode_clock_ok"] == 1.0
+
+
+@pytest.mark.parametrize("m", [2, 4])
+def test_overlapped_decode_eos_midstream(m):
+    """A lane hitting eos mid-block goes inactive inside its lane group
+    without perturbing the other groups' streams."""
+    cfg = _cfg("olmo-1b", n_layers=4)
+    params = _params(cfg)
+    waves = [_prompts(cfg, 4, seed=41)]
+    kw = dict(max_batch=4, max_len=64, max_new_tokens=8, seed=0)
+    free = _ref_streams(cfg, params, waves, **kw)
+    # pick a token some stream emits mid-way: stopping on it exercises
+    # the early-termination path inside a block for that lane only
+    eos = next(
+        toks[len(toks) // 2] for toks in free.values() if len(toks) >= 3
+    )
+    ref = _ref_streams(cfg, params, waves, eos_token=eos, **kw)
+    assert ref != free                       # eos actually cut a stream
+    staged = _engine(
+        cfg, params, stream_pus=_pus(2), decode_microbatches=m,
+        eos_token=eos, **kw
+    )
+    for p in waves[0]:
+        staged.submit(p.copy())
+    got = {r.uid: r.out_tokens for r in staged.run_until_drained()}
+    assert got == ref
+
+
+@pytest.mark.parametrize("m", [2, 4])
+def test_overlapped_decode_no_retraces_after_warmup(m):
+    cfg = _cfg("olmo-1b", n_layers=4)
+    params = _params(cfg)
+    eng = _engine(
+        cfg, params, stream_pus=_pus(2), decode_microbatches=m,
+        max_batch=4, max_len=96, max_new_tokens=5,
+    )
+    eng.warmup()
+    warm = dict(eng.trace_counts)
+    for i, wave in enumerate(
+        [_prompts(cfg, 4, seed=51), _prompts(cfg, 2, seed=53)]
+    ):
+        for p in wave:
+            eng.submit(p)
+        if i == 0:
+            eng.step()
+    done = eng.run_until_drained()
+    assert len(done) == 6
+    assert eng.trace_counts == warm, (warm, eng.trace_counts)
+
+
+def test_coalesced_block_matches_threaded_executor():
+    """The single-device coalesced fast path and the threaded session
+    executor run the same overlapped schedule: identical streams, and
+    the coalesced analytic virtual account reproduces the threaded
+    session's executed account (busy and span -- the same equality
+    clock_ok checks per frame)."""
+    cfg = _cfg("olmo-1b", n_layers=4)
+    params = _params(cfg)
+    waves = [_prompts(cfg, 4, seed=61), _prompts(cfg, 2, seed=63)]
+    kw = dict(
+        max_batch=4, max_len=64, max_new_tokens=6, seed=0,
+        stream_pus=_pus(2), decode_microbatches=2,
+    )
+    results = {}
+    for mode in ("coalesced", "threaded"):
+        eng = _engine(cfg, params, **kw)
+        assert eng._staged.coalesce       # single-device sim: auto-on
+        if mode == "threaded":
+            eng._staged.coalesce = False
+        for i, wave in enumerate(waves):
+            for p in wave:
+                eng.submit(p.copy())
+            if i == 0:
+                eng.step()
+        streams = {r.uid: r.out_tokens for r in eng.run_until_drained()}
+        s = eng.stats()
+        assert s["stage_decode_clock_ok"] == 1.0
+        results[mode] = (streams, s)
+    assert results["coalesced"][0] == results["threaded"][0]
+    assert results["coalesced"][1]["stage_decode_bubble"] == pytest.approx(
+        results["threaded"][1]["stage_decode_bubble"], rel=1e-6
+    )
+    assert results["coalesced"][1]["stage_decode_rounds"] == (
+        results["threaded"][1]["stage_decode_rounds"]
+    )
+
+
+def test_staged_tuner_knee_avoids_degenerate_depth():
+    """On an imbalance-dominated plan (host_offload vs tpu_v5e stage
+    times ~25:1) no M reaches the target-bubble band; the knee rule
+    must then pick the *shallowest* M within a quarter of the bubble
+    spread instead of the deepest split (which buys no bubble but
+    multiplies per-frame overhead)."""
+    from repro.runtime.autotune import AutotuneConfig, tune_staged_decode
+
+    cfg = _cfg("olmo-1b")
+    pplan = plan_partitioned_streaming(cfg, _pus(2), batch_tokens=4)
+    tune = tune_staged_decode(
+        pplan, 4, AutotuneConfig(target_bubble=0.10)
+    )
+    assert not tune.within_tolerance          # imbalance floor ~0.48
+    ms = [t["m"] for t in tune.trials]
+    assert max(ms) >= 4                       # the deep split was probed
+    assert tune.n_groups < max(ms)            # ...and rejected
+    bubbles = {t["m"]: t["bubble"] for t in tune.trials}
+    b_min, b_max = min(bubbles.values()), max(bubbles.values())
+    knee = b_min + 0.25 * (b_max - b_min)
+    assert bubbles[tune.n_groups] <= knee
+    assert all(
+        m >= tune.n_groups for m, b in bubbles.items() if b <= knee
+    )
