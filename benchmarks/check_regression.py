@@ -33,6 +33,14 @@ Gates:
   the single-PU device loop, >= 2 stages, the executed virtual clock
   matching the plan recurrence, zero retraces after warmup, and
   steady-state decode throughput >= 1.0x the fused single-PU loop.
+  The ``decode_kernels`` record gates the fused Pallas decode kernels:
+  --decode-kernels greedy streams argmax-identical to the composed-XLA
+  decode, zero retraces after warmup, every per-op kernel within
+  numeric tolerance of its XLA composition, and (compiled runs only --
+  the record carries ``interpreted``; CPU CI runs the kernels through
+  the Pallas interpreter, where "speedup" measures interpreter
+  overhead, not the fused datapath) decode throughput >= 1.0x the XLA
+  path.
 
 Exit code 1 on any regression, with one line per violation.
 """
@@ -74,6 +82,14 @@ SERVE_DECODE_SPEEDUP_FLOOR = 1.5
 # floor is the PR's acceptance criterion, up from the 0.34x serial
 # staged loop it replaces).
 PIPELINE_DECODE_VS_SINGLE_PU_FLOOR = 1.0
+
+# Fused Pallas decode kernels (--decode-kernels): steady-state decode
+# throughput floor vs the composed-XLA decode, applied only when the
+# record was produced by a *compiled* run (interpreted=false) -- the
+# ISSUE's "interpret-comparable terms": on CPU both paths lower to the
+# same XLA ops modulo interpreter overhead, so only correctness
+# (argmax-identity, per-op tolerance, retraces) gates there.
+DECODE_KERNELS_SPEEDUP_FLOOR = 1.0
 
 
 def committed(name: str, ref: str) -> dict | None:
@@ -248,6 +264,43 @@ def check_serve(cand: dict, errors: list[str]) -> None:
                 f"serve/pipeline_decode: staged K=2 steady-state decode "
                 f"{ratio:.2f}x the fused single-PU loop < "
                 f"{PIPELINE_DECODE_VS_SINGLE_PU_FLOOR:.1f}x floor"
+            )
+    dk = cand.get("decode_kernels")
+    if dk is None:
+        errors.append(
+            "serve: decode_kernels record missing (fused Pallas decode "
+            "kernels -- run `benchmarks.run --only serve`)"
+        )
+        return
+    interpreted = dk.get("interpreted", True)
+    if not dk.get("per_op"):
+        errors.append("serve/decode_kernels: per-op records missing")
+    for op, rec in dk.get("per_op", {}).items():
+        if not rec.get("ok", False):
+            errors.append(
+                f"serve/decode_kernels/{op}: fused kernel outside numeric "
+                "tolerance of the XLA composition"
+            )
+    if not dk.get("configs"):
+        errors.append("serve/decode_kernels: end-to-end records missing")
+    for arch, rec in dk.get("configs", {}).items():
+        if not rec.get("argmax_identical", False):
+            errors.append(
+                f"serve/decode_kernels/{arch}: --decode-kernels greedy "
+                "stream diverged from the composed-XLA decode"
+            )
+        retr = rec.get("retraces_after_warmup", -1)
+        if retr != 0:
+            errors.append(
+                f"serve/decode_kernels/{arch}: {retr} retraces after "
+                "warmup (ceiling is 0)"
+            )
+        spd = rec.get("decode_speedup", 0.0)
+        if not interpreted and spd < DECODE_KERNELS_SPEEDUP_FLOOR:
+            errors.append(
+                f"serve/decode_kernels/{arch}: compiled decode speedup "
+                f"{spd:.2f}x < {DECODE_KERNELS_SPEEDUP_FLOOR:.1f}x floor "
+                "vs the XLA decode"
             )
 
 

@@ -232,8 +232,7 @@ def bench_aimc():
 
 def bench_kernel_gemm(fast: bool):
     import jax.numpy as jnp
-    from repro.kernels.int8_gemm import int8_gemm
-    from repro.kernels import ref
+    from repro.kernels import int8_gemm, ref
 
     rng = np.random.default_rng(0)
     n, m, p = (128, 256, 128) if fast else (256, 512, 256)
@@ -656,7 +655,12 @@ def bench_serve_suite(fast: bool):
     the plan recurrence, and on the >=1.0x steady-state decode
     throughput floor vs the fused loop; a lane-group sweep
     (M in {1,2,4,auto} x K in {2,3}) records bubble fraction and
-    tokens/s per point.  Emits BENCH_serve.json at the repo root; CI
+    tokens/s per point; plus the ``decode_kernels`` record -- the fused
+    Pallas decode kernels A/B'd against the composed-XLA decode, per-op
+    (decode-attention, MLP, QKV at the smoke configs' shapes) and
+    end-to-end, gated on argmax-identical greedy streams and zero
+    retraces (the speedup floor applies to compiled runs only; CPU runs
+    the kernels interpreted).  Emits BENCH_serve.json at the repo root; CI
     gates on the >=1.5x speedup floor, a zero-retrace ceiling after
     warmup, and bit-identity on the dense configs (MoE capacity
     coupling legitimately perturbs logits under admission regrouping,
@@ -676,12 +680,12 @@ def bench_serve_suite(fast: bool):
     max_new = 12 if fast else 16
     records = {"n_requests": n_req, "max_new_tokens": max_new, "configs": {}}
 
-    def mk_engine(cfg, params, host):
+    def mk_engine(cfg, params, host, decode_kernels=False):
         return ServingEngine(
             cfg, params,
             ServeConfig(
                 max_batch=4, max_len=96, max_new_tokens=max_new,
-                host_sampling=host,
+                host_sampling=host, decode_kernels=decode_kernels,
             ),
         )
 
@@ -714,7 +718,9 @@ def bench_serve_suite(fast: bool):
         }
         return toks / wall, wall, streams, retraces
 
-    def decode_phase_rate(cfg, params, host, stream_pus=None, m=0):
+    def decode_phase_rate(
+        cfg, params, host, stream_pus=None, m=0, decode_kernels=False
+    ):
         """Steady-state decode rate with prefill out of the timed window:
         admit a full batch, then time the pure decode drain.  Median over
         trials (single-run walls are jittery at smoke scale).  With
@@ -731,6 +737,7 @@ def bench_serve_suite(fast: bool):
                     max_batch=4, max_len=decode_new + 40,
                     max_new_tokens=decode_new, host_sampling=host,
                     stream_pus=stream_pus, decode_microbatches=m,
+                    decode_kernels=decode_kernels,
                 ),
             )
             eng.warmup()
@@ -917,6 +924,142 @@ def bench_serve_suite(fast: bool):
             "sweep": sweep,
         }
 
+        # fused Pallas decode kernels (--decode-kernels): per-op
+        # microbenchmark (fused kernel vs the same math composed from
+        # jitted XLA primitives, at the smoke configs' decode shapes)
+        # plus an end-to-end engine A/B on identical traffic.  On CPU
+        # the kernels run through the Pallas interpreter
+        # (interpreted=true) so the timing ratios are recorded for
+        # attribution but the speedup floor only gates compiled (TPU)
+        # runs; argmax-identity and the zero-retrace ceiling gate
+        # everywhere (benchmarks/check_regression.py).
+        import functools
+
+        import jax.numpy as jnp
+
+        from repro.kernels import (
+            decode_attention_ref,
+            default_interpret,
+            fused_decode_attention,
+            fused_mlp,
+            fused_mlp_ref,
+            fused_qkv,
+            fused_qkv_ref,
+        )
+        from repro.kernels import dispatch as kdispatch
+
+        krec = {
+            "interpreted": bool(default_interpret()),
+            "per_op": {},
+            "configs": {},
+        }
+        kop_archs = ("olmo-1b",) if fast else ("olmo-1b", "gemma3-12b")
+        kb, ksk = 4, 96
+        rngk = np.random.default_rng(7)
+
+        def _tol_ok(a, b, atol=5e-2):
+            return bool(
+                np.allclose(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    atol=atol,
+                )
+            )
+
+        for arch in kop_archs:
+            kcfg = smoke_variant(get_config(arch))
+            d, f = kcfg.d_model, kcfg.d_ff
+            hq, hkv, hd = kcfg.n_heads, kcfg.n_kv_heads, kcfg.head_dim
+            blocks = kdispatch.kernel_blocks(kcfg, sk=ksk)
+            mk = lambda *s: jnp.asarray(
+                rngk.normal(size=s) * 0.05, jnp.bfloat16
+            )
+            x = mk(kb, d)
+            qb, kbuf, vbuf = mk(kb, hq, hd), mk(kb, ksk, hkv, hd), mk(kb, ksk, hkv, hd)
+            wo = mk(hq * hd, d)
+            wq_, wk_, wv_ = mk(d, hq * hd), mk(d, hkv * hd), mk(d, hkv * hd)
+            wu, wd_ = mk(d, f), mk(f, d)
+            wg = mk(d, f) if kcfg.mlp == "swiglu" else None
+            pos = jnp.asarray(rngk.integers(0, ksk, kb), jnp.int32)
+            vlen = jnp.asarray(rngk.integers(1, ksk + 1, kb), jnp.int32)
+
+            qkv_kw = dict(
+                n_heads=hq, n_kv_heads=hkv, head_dim=hd, rope=True,
+                theta=float(kcfg.rope_theta),
+            )
+            xla_qkv = jax.jit(functools.partial(fused_qkv_ref, **qkv_kw))
+            ops_tbl = {
+                "decode_attention": (
+                    lambda: fused_decode_attention(
+                        qb, kbuf, vbuf, wo, q_positions=pos,
+                        kv_valid_len=vlen, block_s=blocks["block_s"],
+                    ),
+                    jax.jit(
+                        lambda: decode_attention_ref(
+                            qb, kbuf, vbuf, wo, q_positions=pos,
+                            kv_valid_len=vlen,
+                        )
+                    ),
+                ),
+                "mlp": (
+                    lambda: fused_mlp(
+                        x, wu, wg, None, wd_, None, act=kcfg.mlp,
+                        block_f=blocks["block_f"],
+                    ),
+                    jax.jit(
+                        lambda: fused_mlp_ref(
+                            x, wu, wg, None, wd_, None, act=kcfg.mlp
+                        )
+                    ),
+                ),
+                "qkv": (
+                    lambda: fused_qkv(
+                        x, wq_, wk_, wv_, None, None, None, pos,
+                        block_m=blocks["block_m"], **qkv_kw,
+                    ),
+                    lambda: xla_qkv(x, wq_, wk_, wv_, None, None, None, pos),
+                ),
+            }
+            for op, (kfn, xfn) in ops_tbl.items():
+                yk, us_k = timed(
+                    lambda: jax.block_until_ready(kfn()), repeats=3
+                )
+                yx, us_x = timed(
+                    lambda: jax.block_until_ready(xfn()), repeats=3
+                )
+                ya = jax.tree.leaves(yk)
+                yb = jax.tree.leaves(yx)
+                krec["per_op"][f"{arch}/{op}"] = {
+                    "kernel_us": us_k,
+                    "xla_us": us_x,
+                    "speedup": us_x / us_k,
+                    "ok": all(_tol_ok(a, b) for a, b in zip(ya, yb)),
+                }
+
+        for arch in kop_archs:
+            kcfg = smoke_variant(get_config(arch))
+            kapi = model_api.get_api(kcfg)
+            kparams = kapi.init_params(kcfg, jax.random.PRNGKey(0))
+            kprompts = traffic(kcfg)
+            xeng = mk_engine(kcfg, kparams, host=False)
+            x_tps, _, x_streams, _ = run_one(xeng, kprompts)
+            keng = mk_engine(kcfg, kparams, host=False, decode_kernels=True)
+            k_tps, _, k_streams, kretr = run_one(keng, kprompts)
+            k_dec = decode_phase_rate(
+                kcfg, kparams, host=False, decode_kernels=True
+            )
+            x_dec = decode_phase_rate(kcfg, kparams, host=False)
+            krec["configs"][arch] = {
+                "kernel_tokens_per_s": k_tps,
+                "xla_tokens_per_s": x_tps,
+                "e2e_speedup": k_tps / x_tps,
+                "kernel_decode_tokens_per_s": k_dec,
+                "xla_decode_tokens_per_s": x_dec,
+                "decode_speedup": k_dec / x_dec,
+                "argmax_identical": k_streams == x_streams,
+                "retraces_after_warmup": sum(kretr.values()),
+            }
+        records["decode_kernels"] = krec
+
         # TTFT / TPOT under a Poisson arrival trace (olmo): requests
         # arrive on the open-loop clock; the engine keeps fusing decode
         # blocks between admissions.  Both the fused device loop and the
@@ -990,6 +1133,14 @@ def bench_serve_suite(fast: bool):
         + f";tpot_p50={tt['tpot_p50_s']:.4f}s"
         + f";staged_k2:x{pd['vs_single_pu']:.2f}"
         f"(m={pd['microbatches']},bub={pd['bubble']:.2f})"
+    )
+    dk = records["decode_kernels"]
+    dko = dk["configs"]["olmo-1b"]
+    derived += (
+        f";dk:x{dko['decode_speedup']:.2f}"
+        f"(bit={int(dko['argmax_identical'])}"
+        f",retr={dko['retraces_after_warmup']}"
+        f",interp={int(dk['interpreted'])})"
     )
     emit("serve", us, derived, records)
     (ROOT / "BENCH_serve.json").write_text(json.dumps(records, indent=1))

@@ -61,6 +61,12 @@ class ModelConfig:
     # mixtral's 4k window, 128x at 500k).  Only valid when window is set
     # and there are no global layers.
     kv_ring: bool = False
+    # Fused Pallas decode kernels (kernels/decode.py) on the single-token
+    # serving hot path: QKV+RoPE, GQA attention + output projection, and
+    # the (gated-)MLP each run as one weight-streaming kernel instead of
+    # composed XLA primitives.  Threaded from ServeConfig.decode_kernels
+    # by the serving engine; dense (non-MoE) MLPs only (kernels/dispatch.py).
+    decode_kernels: bool = False
     # remat: 'none' | 'layer'
     remat: str = "layer"
 

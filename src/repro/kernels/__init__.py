@@ -1,3 +1,49 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer: the paper's PU datapath, TPU-native.
+
+Public surface for everything callers need -- the int8 GEMM/conv stack
+(``ops``), the NIU refresh, the fused decode-stage kernels (``decode``),
+the model-facing dispatch layer, the pure-jnp oracles (``ref``), and the
+interpret/compiled dispatch rule (``common``).  Import from here rather
+than from submodules.
+"""
+from repro.kernels import dispatch, ref
+from repro.kernels.common import default_interpret, resolve_interpret
+from repro.kernels.decode import (
+    fused_decode_attention,
+    fused_mlp,
+    fused_qkv,
+)
+from repro.kernels.ops import (
+    conv2d_int8,
+    conv2d_int8_ref,
+    im2col,
+    im2col_ref,
+    int8_gemm,
+    int8_gemm_ref,
+    niu_refresh,
+)
+from repro.kernels.ref import (
+    decode_attention_ref,
+    fused_mlp_ref,
+    fused_qkv_ref,
+)
+
+__all__ = [
+    "conv2d_int8",
+    "conv2d_int8_ref",
+    "decode_attention_ref",
+    "default_interpret",
+    "dispatch",
+    "fused_decode_attention",
+    "fused_mlp",
+    "fused_qkv",
+    "im2col",
+    "im2col_ref",
+    "int8_gemm",
+    "int8_gemm_ref",
+    "fused_mlp_ref",
+    "fused_qkv_ref",
+    "niu_refresh",
+    "ref",
+    "resolve_interpret",
+]

@@ -1,0 +1,568 @@
+"""Fused Pallas decode-stage kernels: the paper's PU datapath on the
+per-token serving hot path.
+
+Three kernels cover the two per-token hot ops of one decode layer
+(DESIGN.md SS10); all reuse ``int8_gemm.py``'s structure -- a reduction
+grid streaming weight/state tiles HBM->VMEM, accumulation into VMEM
+scratch across grid steps, and the post-processing fused into the last
+step's epilogue:
+
+- :func:`fused_qkv` -- the Q/K/V projections of a single decode token as
+  one weight-streaming pass over ``d_model`` (shared activation tile, all
+  three heads' accumulators live in scratch), with bias add and RoPE
+  rotation fused into the epilogue.
+- :func:`fused_decode_attention` -- single-token GQA attention over the
+  whole KV cache *and* the output projection: per-lane ring/valid/window
+  masking and a streaming-softmax (running max / denom / accumulator)
+  reduction over KV blocks, with ``ctx @ wo + bo`` fused into the final
+  block's epilogue so the (B, Hq, hd) context never round-trips HBM.
+- :func:`fused_mlp` -- the (gated-)MLP as one pass over ``d_ff`` blocks:
+  up/gate GEMMs, bias and activation per block, immediately contracted
+  through the matching ``w_down`` rows into a (B, d_model) scratch
+  accumulator -- the (B, d_ff) intermediate never materializes in HBM.
+
+Blocking matches the plan's weight-streaming granularity: a schedulable
+plan tile is one weight matrix (``runtime.serving.model_gemms``), and the
+kernel splits a tile into VMEM-budgeted sub-blocks only when it exceeds
+the budget (``dispatch.kernel_blocks``), so the planner's tile sequence
+and the kernel's block sequence describe the same traffic.
+
+Numerics mirror the XLA reference ops (f32 accumulation, one rounding to
+the compute dtype per GEMM, masking with the same -1e30 sentinel), so
+greedy decode streams stay argmax-identical to the composed-XLA path;
+exact bit-identity is NOT guaranteed (streaming softmax reassociates).
+
+``interpret=None`` resolves through :func:`common.default_interpret`:
+interpreted on CPU, compiled on TPU, ``REPRO_KERNEL_INTERPRET`` override.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import resolve_interpret
+
+_NEG = -1e30          # masking sentinel; matches models.attention._NEG
+_BIG = jnp.iinfo(jnp.int32).max
+# padded ring-slot / arange sentinels (chosen so every mask comparison on
+# a padded column is False without int32 overflow)
+_PAD_NEG = -(1 << 30)
+_PAD_POS = 1 << 30
+
+
+def _pad_axis(a: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    rem = (-a.shape[axis]) % mult
+    if not rem:
+        return a
+    pads = [(0, 0)] * a.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(a, pads, constant_values=value)
+
+
+# ------------------------------------------------------------- fused QKV --
+
+
+def _qkv_kernel(
+    x_ref,          # (B, bm)
+    wq_ref,         # (bm, Dq)
+    wk_ref,         # (bm, Dkv)
+    wv_ref,         # (bm, Dkv)
+    bq_ref,         # (1, Dq)
+    bk_ref,         # (1, Dkv)
+    bv_ref,         # (1, Dkv)
+    sin_ref,        # (B, hd/2) f32
+    cos_ref,        # (B, hd/2) f32
+    q_ref,          # out (B, Dq)
+    k_ref,          # out (B, Dkv)
+    v_ref,          # out (B, Dkv)
+    accq_ref,       # scratch (B, Dq) f32
+    acck_ref,       # scratch (B, Dkv) f32
+    accv_ref,       # scratch (B, Dkv) f32
+    *,
+    n_m: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope: bool,
+    has_bias: bool,
+):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        accq_ref[...] = jnp.zeros_like(accq_ref)
+        acck_ref[...] = jnp.zeros_like(acck_ref)
+        accv_ref[...] = jnp.zeros_like(accv_ref)
+
+    xb = x_ref[...]
+    dims = (((1,), (0,)), ((), ()))
+    accq_ref[...] += jax.lax.dot_general(
+        xb, wq_ref[...], dims, preferred_element_type=jnp.float32
+    )
+    acck_ref[...] += jax.lax.dot_general(
+        xb, wk_ref[...], dims, preferred_element_type=jnp.float32
+    )
+    accv_ref[...] += jax.lax.dot_general(
+        xb, wv_ref[...], dims, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == n_m - 1)
+    def _epilogue():
+        dt = q_ref.dtype
+        # one rounding to the compute dtype per GEMM (mirrors the XLA dot),
+        # THEN bias, THEN rope -- project_qkv/apply_rope op order.
+        q = accq_ref[...].astype(dt)
+        k = acck_ref[...].astype(dt)
+        v = accv_ref[...].astype(dt)
+        if has_bias:
+            q = q + bq_ref[...].astype(dt)
+            k = k + bk_ref[...].astype(dt)
+            v = v + bv_ref[...].astype(dt)
+
+        if rope:
+            b = q.shape[0]
+            half = head_dim // 2
+            cos = cos_ref[...][:, None, :]           # (B, 1, hd/2)
+            sin = sin_ref[...][:, None, :]
+
+            def rot(t, heads):
+                tf = t.reshape(b, heads, head_dim).astype(jnp.float32)
+                t1 = tf[..., :half]
+                t2 = tf[..., half:]
+                out = jnp.concatenate(
+                    [t1 * cos - t2 * sin, t2 * cos + t1 * sin], axis=-1
+                )
+                return out.astype(dt).reshape(b, heads * head_dim)
+
+            q = rot(q, n_heads)
+            k = rot(k, n_kv_heads)
+        q_ref[...] = q
+        k_ref[...] = k
+        v_ref[...] = v
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_heads", "n_kv_heads", "head_dim", "rope", "theta",
+        "block_m", "interpret",
+    ),
+)
+def fused_qkv(
+    x: jax.Array,                       # (B, d) compute dtype
+    wq: jax.Array,                      # (d, Hq*hd)
+    wk: jax.Array,                      # (d, Hkv*hd)
+    wv: jax.Array,                      # (d, Hkv*hd)
+    bq: Optional[jax.Array] = None,     # (Hq*hd,)
+    bk: Optional[jax.Array] = None,
+    bv: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,   # (B,) int32 (rope only)
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope: bool = True,
+    theta: float = 1e4,
+    block_m: int = 512,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode token's QKV projections + bias + RoPE in one pass.
+
+    Returns ``(q (B, Hq, hd), k (B, Hkv, hd), v (B, Hkv, hd))`` in
+    ``x.dtype`` -- the post-rope tensors the cache write and attention
+    consume.
+    """
+    interpret = resolve_interpret(interpret)
+    b, d = x.shape
+    dq, dkv = n_heads * head_dim, n_kv_heads * head_dim
+    dt = x.dtype
+    has_bias = bq is not None
+
+    if positions is None:
+        positions = jnp.zeros((b,), jnp.int32)
+    if rope:
+        freqs = 1.0 / (
+            theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+        )
+        angles = positions[:, None].astype(jnp.float32) * freqs   # (B, hd/2)
+        sin, cos = jnp.sin(angles), jnp.cos(angles)
+    else:
+        sin = cos = jnp.zeros((b, head_dim // 2), jnp.float32)
+
+    zq = jnp.zeros((1, dq), dt)
+    zkv = jnp.zeros((1, dkv), dt)
+    bq2 = bq.reshape(1, dq).astype(dt) if has_bias else zq
+    bk2 = bk.reshape(1, dkv).astype(dt) if has_bias else zkv
+    bv2 = bv.reshape(1, dkv).astype(dt) if has_bias else zkv
+
+    block_m = min(block_m, d)
+    xp = _pad_axis(x, 1, block_m)
+    wqp = _pad_axis(wq.astype(dt), 0, block_m)
+    wkp = _pad_axis(wk.astype(dt), 0, block_m)
+    wvp = _pad_axis(wv.astype(dt), 0, block_m)
+    n_m = xp.shape[1] // block_m
+
+    q, k, v = pl.pallas_call(
+        functools.partial(
+            _qkv_kernel, n_m=n_m, n_heads=n_heads, n_kv_heads=n_kv_heads,
+            head_dim=head_dim, rope=rope, has_bias=has_bias,
+        ),
+        grid=(n_m,),
+        in_specs=[
+            pl.BlockSpec((b, block_m), lambda j: (0, j)),
+            pl.BlockSpec((block_m, dq), lambda j: (j, 0)),
+            pl.BlockSpec((block_m, dkv), lambda j: (j, 0)),
+            pl.BlockSpec((block_m, dkv), lambda j: (j, 0)),
+            pl.BlockSpec((1, dq), lambda j: (0, 0)),
+            pl.BlockSpec((1, dkv), lambda j: (0, 0)),
+            pl.BlockSpec((1, dkv), lambda j: (0, 0)),
+            pl.BlockSpec((b, head_dim // 2), lambda j: (0, 0)),
+            pl.BlockSpec((b, head_dim // 2), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, dq), lambda j: (0, 0)),
+            pl.BlockSpec((b, dkv), lambda j: (0, 0)),
+            pl.BlockSpec((b, dkv), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, dq), dt),
+            jax.ShapeDtypeStruct((b, dkv), dt),
+            jax.ShapeDtypeStruct((b, dkv), dt),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b, dq), jnp.float32),
+            pltpu.VMEM((b, dkv), jnp.float32),
+            pltpu.VMEM((b, dkv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wqp, wkp, wvp, bq2, bk2, bv2, sin, cos)
+    return (
+        q.reshape(b, n_heads, head_dim),
+        k.reshape(b, n_kv_heads, head_dim),
+        v.reshape(b, n_kv_heads, head_dim),
+    )
+
+
+# -------------------------------------------- fused decode attention + wo --
+
+
+def _decode_attn_kernel(
+    q_ref,          # (1, Hq, hd)
+    k_ref,          # (1, bs, Hkv, hd)
+    v_ref,          # (1, bs, Hkv, hd)
+    col_ref,        # (1, bs) int32 -- absolute position per cache slot
+    limit_ref,      # (1, 1) int32 -- per-lane valid length
+    row_ref,        # (1, 1) int32 -- query position
+    win_ref,        # (1, 1) int32 -- attention window
+    wo_ref,         # (Hq*hd, d)
+    bo_ref,         # (1, d)
+    out_ref,        # (1, d)
+    m_ref,          # scratch (Hkv, G) f32 -- running max
+    l_ref,          # scratch (Hkv, G) f32 -- running denom
+    acc_ref,        # scratch (Hkv, G, hd) f32 -- running PV accumulator
+    *,
+    n_s: int,
+    n_kv_heads: int,
+    groups: int,
+    head_dim: int,
+    scale: float,
+    causal: bool,
+    use_kvp: bool,
+    has_bias: bool,
+):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (Hq, hd)
+    qs = (q * scale).astype(q.dtype)
+    kb = k_ref[0]                                  # (bs, Hkv, hd)
+    vb = v_ref[0]
+
+    col = col_ref[0]                               # (bs,)
+    if use_kvp:
+        # ring buffer: each slot carries its absolute position; negative
+        # positions mark never-written slots (padded slots carry _PAD_NEG)
+        valid = col >= 0
+    else:
+        valid = col < limit_ref[0, 0]
+    if causal:
+        row = row_ref[0, 0]
+        win = win_ref[0, 0]
+        valid = valid & (col <= row) & (col > row - win)
+
+    # per-kv-head streaming-softmax update (static unroll: Hkv is small and
+    # keeps every dot rank-2 for the MXU)
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_rows, l_rows, acc_rows = [], [], []
+    cdims = (((1,), (1,)), ((), ()))               # (G,hd) x (bs,hd)^T
+    pdims = (((1,), (0,)), ((), ()))               # (G,bs) x (bs,hd)
+    for kh in range(n_kv_heads):
+        qh = qs[kh * groups:(kh + 1) * groups]     # (G, hd)
+        s = jax.lax.dot_general(
+            qh, kb[:, kh, :], cdims, preferred_element_type=jnp.float32
+        )                                          # (G, bs)
+        s = jnp.where(valid[None, :], s, _NEG)
+        m_c = jnp.max(s, axis=-1)                  # (G,)
+        m_new = jnp.maximum(m_prev[kh], m_c)
+        corr = jnp.exp(m_prev[kh] - m_new)
+        p = jnp.exp(s - m_new[:, None])            # (G, bs)
+        l_rows.append(l_prev[kh] * corr + jnp.sum(p, axis=-1))
+        pv = jax.lax.dot_general(
+            p.astype(vb.dtype), vb[:, kh, :], pdims,
+            preferred_element_type=jnp.float32,
+        )                                          # (G, hd)
+        acc_rows.append(acc_prev[kh] * corr[:, None] + pv)
+        m_rows.append(m_new)
+    m_ref[...] = jnp.stack(m_rows)
+    l_ref[...] = jnp.stack(l_rows)
+    acc_ref[...] = jnp.stack(acc_rows)
+
+    @pl.when(s_idx == n_s - 1)
+    def _epilogue():
+        dt = out_ref.dtype
+        ctx = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        ctx = ctx.astype(dt).reshape(1, n_kv_heads * groups * head_dim)
+        y = jax.lax.dot_general(
+            ctx, wo_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(dt)
+        if has_bias:
+            y = y + bo_ref[...].astype(dt)
+        out_ref[...] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_s", "interpret"),
+)
+def fused_decode_attention(
+    q: jax.Array,                       # (B, Hq, hd) post-rope, unscaled
+    k: jax.Array,                       # (B, Sk, Hkv, hd)
+    v: jax.Array,                       # (B, Sk, Hkv, hd)
+    wo: jax.Array,                      # (Hq*hd, d)
+    bo: Optional[jax.Array] = None,     # (d,)
+    *,
+    q_positions: jax.Array,             # (B,) int32 absolute query position
+    kv_valid_len: Optional[jax.Array] = None,   # () or (B,) int32
+    window: Optional[int] = None,               # static sliding window
+    window_arr: Optional[jax.Array] = None,     # dynamic () int32 window
+    kv_positions: Optional[jax.Array] = None,   # (Sk,) or (B, Sk) ring slots
+    causal: bool = True,
+    block_s: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Single-token GQA attention + output projection -> (B, d).
+
+    Mask semantics mirror ``models.attention._decode_attention`` exactly:
+    ``kv_positions`` (ring caches; negative = never written) else
+    ``arange < kv_valid_len``; causal row/window bounds on top.  The KV
+    axis is streamed in ``block_s`` slabs with a running
+    (max, denom, accumulator) softmax, and ``ctx @ wo (+ bo)`` runs in the
+    last slab's epilogue.
+    """
+    interpret = resolve_interpret(interpret)
+    b, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    groups = hq // hkv
+    dt = q.dtype
+    d = wo.shape[1]
+    has_bias = bo is not None
+    use_kvp = kv_positions is not None
+    scale = 1.0 / (hd ** 0.5)
+
+    if block_s is None:
+        block_s = min(sk, 512)
+    block_s = min(block_s, sk)
+
+    if use_kvp:
+        col = jnp.broadcast_to(
+            kv_positions.astype(jnp.int32).reshape(-1, sk), (b, sk)
+        )
+        pad_val = _PAD_NEG
+    else:
+        col = jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32)[None], (b, sk))
+        pad_val = _PAD_POS
+    col = _pad_axis(col, 1, block_s, value=pad_val)
+    kp = _pad_axis(k, 1, block_s)
+    vp = _pad_axis(v, 1, block_s)
+    n_s = kp.shape[1] // block_s
+
+    limit = jnp.broadcast_to(
+        jnp.asarray(sk if kv_valid_len is None else kv_valid_len, jnp.int32),
+        (b,),
+    ).reshape(b, 1)
+    row = q_positions.astype(jnp.int32).reshape(b, 1)
+    if window_arr is not None:
+        win = jnp.asarray(window_arr, jnp.int32)
+    elif window is not None:
+        win = jnp.asarray(window, jnp.int32)
+    else:
+        win = jnp.asarray(_BIG, jnp.int32)
+    win = win.reshape(1, 1)
+
+    wo_dt = wo.astype(dt)
+    bo2 = bo.reshape(1, d).astype(dt) if has_bias else jnp.zeros((1, d), dt)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_attn_kernel, n_s=n_s, n_kv_heads=hkv, groups=groups,
+            head_dim=hd, scale=scale, causal=causal, use_kvp=use_kvp,
+            has_bias=has_bias,
+        ),
+        grid=(b, n_s),
+        in_specs=[
+            pl.BlockSpec((1, hq, hd), lambda i, s: (i, 0, 0)),
+            pl.BlockSpec((1, block_s, hkv, hd), lambda i, s: (i, s, 0, 0)),
+            pl.BlockSpec((1, block_s, hkv, hd), lambda i, s: (i, s, 0, 0)),
+            pl.BlockSpec((1, block_s), lambda i, s: (i, s)),
+            pl.BlockSpec((1, 1), lambda i, s: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, s: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, s: (0, 0)),
+            pl.BlockSpec((hq * hd, d), lambda i, s: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, s: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), dt),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, groups), jnp.float32),
+            pltpu.VMEM((hkv, groups), jnp.float32),
+            pltpu.VMEM((hkv, groups, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, kp, vp, col, limit, row, win, wo_dt, bo2)
+    return out
+
+
+# -------------------------------------------------------------- fused MLP --
+
+
+def _mlp_kernel(
+    x_ref,          # (B, d)
+    wg_ref,         # (d, bf) -- gate weights (== up weights when ungated)
+    wu_ref,         # (d, bf)
+    bu_ref,         # (1, bf)
+    wd_ref,         # (bf, d)
+    bd_ref,         # (1, d)
+    out_ref,        # (B, d)
+    acc_ref,        # scratch (B, d) f32
+    *,
+    n_f: int,
+    act: str,
+    gated: bool,
+    has_bias: bool,
+):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dt = out_ref.dtype
+    xb = x_ref[...]
+    dims = (((1,), (0,)), ((), ()))
+    # d_model is unblocked, so each f-slab's up/gate columns complete in one
+    # dot -- rounding to the compute dtype here is exactly the XLA dot's
+    g = jax.lax.dot_general(
+        xb, wg_ref[...], dims, preferred_element_type=jnp.float32
+    ).astype(dt)
+    if has_bias:
+        g = g + bu_ref[...].astype(dt)
+    if gated:
+        up = jax.lax.dot_general(
+            xb, wu_ref[...], dims, preferred_element_type=jnp.float32
+        ).astype(dt)
+    if act == "swiglu":
+        h = jax.nn.silu(g) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(g)
+    elif act == "sq_relu":
+        r = jax.nn.relu(g)
+        h = r * r
+    else:
+        raise ValueError(act)
+    acc_ref[...] += jax.lax.dot_general(
+        h.astype(dt), wd_ref[...], dims, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == n_f - 1)
+    def _epilogue():
+        y = acc_ref[...].astype(dt)
+        if has_bias:
+            y = y + bd_ref[...].astype(dt)
+        out_ref[...] = y
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "block_f", "interpret")
+)
+def fused_mlp(
+    x: jax.Array,                       # (B, d) compute dtype
+    w_up: jax.Array,                    # (d, f)
+    w_gate: Optional[jax.Array] = None, # (d, f) -- presence selects gating
+    b_up: Optional[jax.Array] = None,   # (f,)
+    w_down: Optional[jax.Array] = None, # (f, d)
+    b_down: Optional[jax.Array] = None, # (d,)
+    *,
+    act: str = "swiglu",
+    block_f: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """up-proj -> activation -> down-proj without the HBM intermediate.
+
+    Matches ``models.mlp.mlp_apply``: ``g = x @ (w_gate or w_up) (+ b_up)``,
+    ``up = x @ w_up`` when gated, ``act(g, up) @ w_down (+ b_down)``.
+    """
+    interpret = resolve_interpret(interpret)
+    b, d = x.shape
+    f = w_up.shape[1]
+    dt = x.dtype
+    gated = w_gate is not None
+    has_bias = b_up is not None
+    if act == "swiglu" and not gated:
+        raise ValueError("swiglu requires w_gate")
+
+    block_f = min(block_f, f)
+    wg = (w_gate if gated else w_up).astype(dt)
+    wu = w_up.astype(dt)
+    wgp = _pad_axis(wg, 1, block_f)
+    wup = _pad_axis(wu, 1, block_f)
+    wdp = _pad_axis(w_down.astype(dt), 0, block_f)
+    fp = wgp.shape[1]
+    n_f = fp // block_f
+    bu2 = (
+        _pad_axis(b_up.reshape(1, f).astype(dt), 1, block_f)
+        if has_bias else jnp.zeros((1, fp), dt)
+    )
+    bd2 = (
+        b_down.reshape(1, d).astype(dt) if has_bias else jnp.zeros((1, d), dt)
+    )
+
+    out = pl.pallas_call(
+        functools.partial(
+            _mlp_kernel, n_f=n_f, act=act, gated=gated, has_bias=has_bias
+        ),
+        grid=(n_f,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda j: (0, 0)),
+            pl.BlockSpec((d, block_f), lambda j: (0, j)),
+            pl.BlockSpec((d, block_f), lambda j: (0, j)),
+            pl.BlockSpec((1, block_f), lambda j: (0, j)),
+            pl.BlockSpec((block_f, d), lambda j: (j, 0)),
+            pl.BlockSpec((1, d), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, d), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), dt),
+        scratch_shapes=[pltpu.VMEM((b, d), jnp.float32)],
+        interpret=interpret,
+    )(x, wgp, wup, bu2, wdp, bd2)
+    return out

@@ -16,10 +16,13 @@ dimensions and Conv characteristics".
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.common import resolve_interpret
 
 
 def _im2col_kernel(img_ref, out_ref, *, k: int, stride: int, ow: int, c: int):
@@ -47,9 +50,13 @@ def im2col(
     stride: int = 1,
     pad: int = 0,
     *,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Patch matrix (OH*OW, k*k*C) from an HWC feature map."""
+    """Patch matrix (OH*OW, k*k*C) from an HWC feature map.
+
+    ``interpret=None`` resolves via :func:`common.default_interpret`.
+    """
+    interpret = resolve_interpret(interpret)
     h, w, c = img.shape
     imgp = jnp.pad(img, ((pad, pad), (pad, pad), (0, 0)))
     oh = (h + 2 * pad - k) // stride + 1

@@ -31,6 +31,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quant import INT8_MAX, INT8_MIN
+from repro.kernels.common import resolve_interpret
 
 
 def _gemm_kernel(
@@ -108,12 +109,14 @@ def int8_gemm(
     block_n: int = 128,
     block_p: int = 128,
     block_m: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Quantized GEMM ``y = post(shift_round(w @ x + bias))`` -> int8 (N, P).
 
-    ``interpret=True`` validates on CPU; on TPU pass ``interpret=False``.
+    ``interpret=None`` resolves via :func:`common.default_interpret`
+    (interpreted off-TPU, compiled on TPU, env override).
     """
+    interpret = resolve_interpret(interpret)
     n, m = w.shape
     m2, p = x.shape
     assert m == m2, (w.shape, x.shape)

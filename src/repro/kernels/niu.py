@@ -22,10 +22,13 @@ with w = q * 2^e and w_max the tile's programmed range.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.common import resolve_interpret
 
 
 def _mix(x: jax.Array) -> jax.Array:
@@ -108,12 +111,14 @@ def niu_refresh(
     drift: float = 1.0,
     block_r: int = 256,
     block_c: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """One NIU round: fresh noise instance on an int8 weight tile -> int8.
 
-    ``interpret=True`` validates on CPU; pass False on TPU.
+    ``interpret=None`` resolves via :func:`common.default_interpret`
+    (interpreted off-TPU, compiled on TPU, env override).
     """
+    interpret = resolve_interpret(interpret)
     r, c = q.shape
     pad_r, pad_c = (-r) % block_r, (-c) % block_c
     qp = jnp.pad(q, ((0, pad_r), (0, pad_c))) if (pad_r or pad_c) else q

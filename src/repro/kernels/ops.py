@@ -14,10 +14,7 @@ import jax.numpy as jnp
 from repro.kernels import int8_gemm as _gemm
 from repro.kernels import im2col as _im2col
 from repro.kernels import ref as _ref
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.common import default_interpret as _default_interpret
 
 
 def int8_gemm(

@@ -91,3 +91,150 @@ def conv2d_int8_ref(
     if relu:
         y = jnp.maximum(y, 0)
     return y.astype(jnp.int8)
+
+
+# --------------------------------------------------- decode-stage oracles --
+# Standalone jnp mirrors of the models-layer decode math (project_qkv +
+# apply_rope, _decode_attention + project_out, mlp_apply) so the kernels
+# package stays model-independent while tests pin both implementations to
+# one reference.
+
+
+def fused_qkv_ref(
+    x: jax.Array,                       # (B, d)
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    bq: Optional[jax.Array] = None,
+    bk: Optional[jax.Array] = None,
+    bv: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope: bool = True,
+    theta: float = 1e4,
+):
+    """Oracle for :func:`decode.fused_qkv` (projection + bias + RoPE)."""
+    b = x.shape[0]
+    dt = x.dtype
+
+    def proj(w, bias, h):
+        y = x @ w.astype(dt)
+        if bias is not None:
+            y = y + bias.astype(dt)
+        return y.reshape(b, h, head_dim)
+
+    q = proj(wq, bq, n_heads)
+    k = proj(wk, bk, n_kv_heads)
+    v = proj(wv, bv, n_kv_heads)
+    if rope:
+        half = head_dim // 2
+        freqs = 1.0 / (
+            theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+        )
+        ang = positions[:, None].astype(jnp.float32) * freqs
+        cos = jnp.cos(ang)[:, None, :]
+        sin = jnp.sin(ang)[:, None, :]
+
+        def rot(t):
+            tf = t.astype(jnp.float32)
+            t1, t2 = tf[..., :half], tf[..., half:]
+            return jnp.concatenate(
+                [t1 * cos - t2 * sin, t2 * cos + t1 * sin], axis=-1
+            ).astype(dt)
+
+        q, k = rot(q), rot(k)
+    return q, k, v
+
+
+def decode_attention_ref(
+    q: jax.Array,                       # (B, Hq, hd) post-rope, unscaled
+    k: jax.Array,                       # (B, Sk, Hkv, hd)
+    v: jax.Array,
+    wo: jax.Array,                      # (Hq*hd, d)
+    bo: Optional[jax.Array] = None,
+    *,
+    q_positions: jax.Array,
+    kv_valid_len: Optional[jax.Array] = None,
+    window: Optional[int] = None,
+    window_arr: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    causal: bool = True,
+) -> jax.Array:
+    """Oracle for :func:`decode.fused_decode_attention` (attention + wo)."""
+    b, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    dt = q.dtype
+    scale = 1.0 / (hd ** 0.5)
+    qg = (q * scale).reshape(b, hkv, g, hd)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k, preferred_element_type=jnp.float32
+    )
+    if kv_positions is not None:
+        col = jnp.broadcast_to(
+            kv_positions.astype(jnp.int32).reshape(-1, sk), (b, sk)
+        )
+        valid = col >= 0
+    else:
+        col = jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32)[None], (b, sk))
+        limit = jnp.broadcast_to(
+            jnp.asarray(
+                sk if kv_valid_len is None else kv_valid_len, jnp.int32
+            ),
+            (b,),
+        )
+        valid = col < limit[:, None]
+    if causal:
+        row = q_positions.astype(jnp.int32)[:, None]
+        if window_arr is not None:
+            win = jnp.asarray(window_arr, jnp.int32)
+        elif window is not None:
+            win = jnp.asarray(window, jnp.int32)
+        else:
+            win = jnp.asarray(jnp.iinfo(jnp.int32).max, jnp.int32)
+        valid = valid & (col <= row) & (col > row - win)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    ctx = jnp.einsum(
+        "bkgs,bskd->bkgd", (p / denom).astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    ).astype(dt)
+    y = ctx.reshape(b, hq * hd) @ wo.astype(dt)
+    if bo is not None:
+        y = y + bo.astype(dt)
+    return y
+
+
+def fused_mlp_ref(
+    x: jax.Array,                       # (B, d)
+    w_up: jax.Array,
+    w_gate: Optional[jax.Array] = None,
+    b_up: Optional[jax.Array] = None,
+    w_down: Optional[jax.Array] = None,
+    b_down: Optional[jax.Array] = None,
+    *,
+    act: str = "swiglu",
+) -> jax.Array:
+    """Oracle for :func:`decode.fused_mlp` (mirrors ``models.mlp.mlp_apply``)."""
+    dt = x.dtype
+    g = x @ (w_gate if w_gate is not None else w_up).astype(dt)
+    if b_up is not None:
+        g = g + b_up.astype(dt)
+    if act == "swiglu":
+        h = jax.nn.silu(g) * (x @ w_up.astype(dt))
+    elif act == "gelu":
+        h = jax.nn.gelu(g)
+    elif act == "sq_relu":
+        r = jax.nn.relu(g)
+        h = r * r
+    else:
+        raise ValueError(act)
+    y = h @ w_down.astype(dt)
+    if b_down is not None:
+        y = y + b_down.astype(dt)
+    return y

@@ -21,8 +21,10 @@ against ``--target-bubble`` from the measured bubble by default; pass
 an explicit ``--microbatches M`` to pin it.  ``--plan-search
 beam|anneal`` upgrades the streaming/partition planners' adaptive
 phase to schedule search (deterministic via ``--plan-search-seed``).
-``--aimc`` enables the SS VI noise-injection emulation, refreshing
-weights with fresh PCM-style noise every round.
+``--decode-kernels`` swaps the per-token hot ops for the fused Pallas
+decode kernels (kernels/decode.py) while keeping the composed-XLA loop
+as the A/B reference.  ``--aimc`` enables the SS VI noise-injection
+emulation, refreshing weights with fresh PCM-style noise every round.
 """
 from __future__ import annotations
 
@@ -96,6 +98,11 @@ def main() -> int:
                          "vectorized planner's budget on stall search)")
     ap.add_argument("--plan-search-seed", type=int, default=0,
                     help="deterministic seed for --plan-search anneal")
+    ap.add_argument("--decode-kernels", action="store_true",
+                    help="fused Pallas decode kernels (QKV+RoPE, GQA "
+                         "attention + out-projection, gated MLP) on the "
+                         "per-token hot path; default keeps the "
+                         "composed-XLA decode as the A/B reference")
     ap.add_argument("--aimc", action="store_true",
                     help="AIMC noise emulation (SS VI NIU)")
     ap.add_argument("--seed", type=int, default=0)
@@ -132,6 +139,7 @@ def main() -> int:
         ),
         stage_decode=not args.no_stage_decode,
         decode_microbatches=args.microbatches,
+        decode_kernels=args.decode_kernels,
         aimc=AIMCNoiseModel() if args.aimc else None,
         plan_search=(
             SearchConfig(

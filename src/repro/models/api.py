@@ -22,6 +22,13 @@ fused and staged paths share every per-layer op.
 ``make_inputs`` / ``abstract_inputs`` build concrete or ShapeDtypeStruct
 batches for any (config x assigned shape) cell -- the dry-run, smoke tests
 and launchers all share them.
+
+When ``cfg.decode_kernels`` is set, the single-token forward underneath
+every decode entry point (``decode_step`` and ``decode_stage`` alike)
+dispatches the per-token hot ops -- QKV+RoPE, GQA attention + output
+projection, dense MLP -- to the fused Pallas kernels via
+``repro.kernels.dispatch``; the API surface is unchanged, so the fused
+and staged serving paths pick the kernels up from one place.
 """
 from __future__ import annotations
 

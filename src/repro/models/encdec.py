@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import dispatch as kdispatch
 from repro.models import attention as attn
 from repro.models import mlp as mlp_mod
 from repro.models.common import (
@@ -126,8 +127,14 @@ def encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
 def _dec_layer_fn(
     cfg, lp, x, positions, enc_out, self_cache=None, cross_kv=None, decode_pos=None
 ):
+    # fused decode kernels on the single-token path (no rope: the decoder
+    # uses learned positions added at embed time)
+    use_kernels = kdispatch.attention_active(cfg, x) and self_cache is not None
     h = apply_norm(cfg, x, lp.get("attn_norm"))
-    q, k, v = attn.project_qkv(cfg, lp["attn"], h)
+    if use_kernels:
+        q, k, v = kdispatch.decode_qkv(cfg, lp["attn"], h, positions, rope=False)
+    else:
+        q, k, v = attn.project_qkv(cfg, lp["attn"], h)
     new_cache = None
     if self_cache is not None:
         ck, cv = self_cache
@@ -144,11 +151,17 @@ def _dec_layer_fn(
         valid = decode_pos + x.shape[1]
     else:
         valid = None
-    ctx = attn.gqa_attention(
-        q, k, v, q_positions=positions, kv_valid_len=valid, causal=True,
-        chunk=cfg.attn_chunk,
-    )
-    x = x + attn.project_out(cfg, lp["attn"], ctx)
+    if use_kernels:
+        x = x + kdispatch.decode_attention(
+            cfg, lp["attn"], q, k, v,
+            q_positions=positions, kv_valid_len=valid,
+        )
+    else:
+        ctx = attn.gqa_attention(
+            q, k, v, q_positions=positions, kv_valid_len=valid, causal=True,
+            chunk=cfg.attn_chunk,
+        )
+        x = x + attn.project_out(cfg, lp["attn"], ctx)
 
     # cross-attention over encoder output (bidirectional, fixed length)
     h2 = apply_norm(cfg, x, lp.get("cross_norm"))
@@ -169,16 +182,26 @@ def _dec_layer_fn(
         te = enc_h.shape[1]
         kc = kc.reshape(b, te, cfg.n_kv_heads, cfg.head_dim)
         vc = vc.reshape(b, te, cfg.n_kv_heads, cfg.head_dim)
-    ctx2 = attn.gqa_attention(
-        qc, kc, vc, q_positions=positions, causal=False, chunk=cfg.attn_chunk
-    )
-    y = ctx2.reshape(b, s, cfg.n_heads * cfg.head_dim) @ lp["cross"]["wo"].astype(x.dtype)
-    if cfg.attn_bias:
-        y = y + lp["cross"]["bo"].astype(x.dtype)
-    x = x + y
+    if use_kernels:
+        # fixed-length bidirectional cross-attention: same kernel, causal off
+        x = x + kdispatch.decode_attention(
+            cfg, lp["cross"], qc, kc, vc,
+            q_positions=positions, causal=False,
+        )
+    else:
+        ctx2 = attn.gqa_attention(
+            qc, kc, vc, q_positions=positions, causal=False, chunk=cfg.attn_chunk
+        )
+        y = ctx2.reshape(b, s, cfg.n_heads * cfg.head_dim) @ lp["cross"]["wo"].astype(x.dtype)
+        if cfg.attn_bias:
+            y = y + lp["cross"]["bo"].astype(x.dtype)
+        x = x + y
 
     h3 = apply_norm(cfg, x, lp.get("mlp_norm"))
-    x = x + mlp_mod.mlp_apply(cfg, lp["mlp"], h3)
+    if kdispatch.mlp_active(cfg, h3):
+        x = x + kdispatch.decode_mlp(cfg, lp["mlp"], h3)
+    else:
+        x = x + mlp_mod.mlp_apply(cfg, lp["mlp"], h3)
     return x, new_cache, (kc, vc)
 
 

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import dispatch as kdispatch
 from repro.models import attention as attn
 from repro.models import mlp as mlp_mod
 from repro.models import ssm as ssm_mod
@@ -100,10 +101,16 @@ def param_axes(cfg: ModelConfig) -> dict:
 def _shared_block(
     cfg, sp, x, positions, cache_kv=None, decode_pos=None
 ):
+    # fused decode kernels on the single-token path (rope is unconditional
+    # in the hybrid's shared attention block)
+    use_kernels = kdispatch.attention_active(cfg, x) and cache_kv is not None
     h = apply_norm(cfg, x, sp.get("attn_norm"))
-    q, k, v = attn.project_qkv(cfg, sp["attn"], h)
-    q = apply_rope(q, positions, cfg.rope_theta)
-    k = apply_rope(k, positions, cfg.rope_theta)
+    if use_kernels:
+        q, k, v = kdispatch.decode_qkv(cfg, sp["attn"], h, positions, rope=True)
+    else:
+        q, k, v = attn.project_qkv(cfg, sp["attn"], h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
     new_cache = None
     if cache_kv is not None:
         ck, cv = cache_kv
@@ -120,13 +127,22 @@ def _shared_block(
         valid = decode_pos + x.shape[1]
     else:
         valid = None
-    ctx = attn.gqa_attention(
-        q, k, v, q_positions=positions, kv_valid_len=valid, causal=True,
-        chunk=cfg.attn_chunk,
-    )
-    x = x + attn.project_out(cfg, sp["attn"], ctx)
+    if use_kernels:
+        x = x + kdispatch.decode_attention(
+            cfg, sp["attn"], q, k, v,
+            q_positions=positions, kv_valid_len=valid,
+        )
+    else:
+        ctx = attn.gqa_attention(
+            q, k, v, q_positions=positions, kv_valid_len=valid, causal=True,
+            chunk=cfg.attn_chunk,
+        )
+        x = x + attn.project_out(cfg, sp["attn"], ctx)
     h2 = apply_norm(cfg, x, sp.get("mlp_norm"))
-    x = x + mlp_mod.mlp_apply(cfg, sp["mlp"], h2)
+    if kdispatch.mlp_active(cfg, h2):
+        x = x + kdispatch.decode_mlp(cfg, sp["mlp"], h2)
+    else:
+        x = x + mlp_mod.mlp_apply(cfg, sp["mlp"], h2)
     return x, new_cache
 
 

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import dispatch as kdispatch
 from repro.models import attention as attn
 from repro.models import mlp as mlp_mod
 from repro.models.common import (
@@ -145,11 +146,19 @@ def _layer_fn(
     return_kv: bool,
 ):
     dt = x.dtype
+    # fused decode kernels (kernels/decode.py) take over the single-token
+    # hot path when cfg.decode_kernels is set; cache write stays XLA.
+    use_kernels = kdispatch.attention_active(cfg, x) and cache_kv is not None
     h = apply_norm(cfg, x, lp.get("attn_norm"))
-    q, k, v = attn.project_qkv(cfg, lp["attn"], h)
-    if cfg.pos_embed == "rope":
-        q = apply_rope(q, positions, cfg.rope_theta)
-        k = apply_rope(k, positions, cfg.rope_theta)
+    if use_kernels:
+        q, k, v = kdispatch.decode_qkv(
+            cfg, lp["attn"], h, positions, rope=cfg.pos_embed == "rope"
+        )
+    else:
+        q, k, v = attn.project_qkv(cfg, lp["attn"], h)
+        if cfg.pos_embed == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = None
     kv_positions = None
@@ -199,16 +208,25 @@ def _layer_fn(
         k_att, v_att = k, v
         valid = None
 
-    ctx = attn.gqa_attention(
-        q, k_att.astype(dt), v_att.astype(dt),
-        q_positions=positions,
-        kv_valid_len=valid,
-        causal=True,
-        window_arr=window,
-        kv_positions=kv_positions,
-        chunk=cfg.attn_chunk,
-    )
-    x = x + attn.project_out(cfg, lp["attn"], ctx)
+    if use_kernels:
+        x = x + kdispatch.decode_attention(
+            cfg, lp["attn"], q, k_att.astype(dt), v_att.astype(dt),
+            q_positions=positions,
+            kv_valid_len=valid,
+            window_arr=window,
+            kv_positions=kv_positions,
+        )
+    else:
+        ctx = attn.gqa_attention(
+            q, k_att.astype(dt), v_att.astype(dt),
+            q_positions=positions,
+            kv_valid_len=valid,
+            causal=True,
+            window_arr=window,
+            kv_positions=kv_positions,
+            chunk=cfg.attn_chunk,
+        )
+        x = x + attn.project_out(cfg, lp["attn"], ctx)
     x = logical_constraint(x, "batch", "seq", "d_model")
 
     if return_kv and cfg.kv_quant:
@@ -220,6 +238,8 @@ def _layer_fn(
     aux = jnp.zeros((), jnp.float32)
     if cfg.is_moe:
         y, aux = mlp_mod.moe_apply(cfg, lp["moe"], h2)
+    elif kdispatch.mlp_active(cfg, h2):
+        y = kdispatch.decode_mlp(cfg, lp["mlp"], h2)
     else:
         y = mlp_mod.mlp_apply(cfg, lp["mlp"], h2)
     x = x + y

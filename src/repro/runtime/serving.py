@@ -121,6 +121,12 @@ class ServeConfig:
     # AIMC emulation
     aimc: Optional[AIMCNoiseModel] = None
     aimc_refresh_every: int = 1    # refresh noise every N engine rounds
+    # Fused Pallas decode kernels (kernels/decode.py) on the per-token hot
+    # path.  Threaded into ModelConfig.decode_kernels at engine
+    # construction so the fused _decode_block scan, the per-stage loops,
+    # and the coalesced staged path all pick them up through the model
+    # forward; the stock-XLA path (False) stays the A/B reference.
+    decode_kernels: bool = False
 
 
 @dataclasses.dataclass
@@ -176,6 +182,8 @@ class ServingEngine:
         mesh=None,
         rules=None,
     ):
+        if serve_cfg.decode_kernels and not cfg.decode_kernels:
+            cfg = dataclasses.replace(cfg, decode_kernels=True)
         self.cfg = cfg
         self.api = model_api.get_api(cfg)
         self.serve_cfg = serve_cfg

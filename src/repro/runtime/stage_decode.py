@@ -8,7 +8,13 @@ stages carry ``decode_layer_start/stop`` (attached by
 ``serving.plan_partitioned_streaming``, snapped to the family's
 ``decode_slice_points``) to the model's layer-sliced decode entry points
 (``ModelAPI.slice_params`` / ``slice_cache`` / ``decode_embed`` /
-``decode_stage`` / ``decode_unembed``):
+``decode_stage`` / ``decode_unembed``).  The runner is agnostic to
+``cfg.decode_kernels``: the fused Pallas decode kernels live *below*
+``decode_stage`` (models dispatch per-op via ``repro.kernels.dispatch``),
+so both the serial reference and the overlapped schedule pick them up
+with no changes here.
+
+Entry points:
 
 - per-stage **param slices** are materialized once (and re-sliced when
   the bound params change, e.g. an AIMC NIU refresh);

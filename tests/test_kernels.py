@@ -8,10 +8,7 @@ from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
-from repro.kernels import ref
-from repro.kernels.int8_gemm import int8_gemm
-from repro.kernels.im2col import im2col
+from repro.kernels import int8_gemm, ops, ref
 
 
 def _rand_int8(rng, shape):
