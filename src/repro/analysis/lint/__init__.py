@@ -1,0 +1,23 @@
+"""JAX-aware static lint for the repro tree (DESIGN.md SS11).
+
+Run as ``python -m repro.analysis.lint src tests``; exits 1 on any
+unwaived finding.  Rules live in :mod:`repro.analysis.lint.rules`, the
+driver (waiver parsing, reporting) in :mod:`repro.analysis.lint.core`.
+"""
+from repro.analysis.lint.core import (
+    Finding,
+    FileSource,
+    Project,
+    lint_paths,
+    main,
+)
+from repro.analysis.lint.rules import RULES
+
+__all__ = [
+    "Finding",
+    "FileSource",
+    "Project",
+    "RULES",
+    "lint_paths",
+    "main",
+]

@@ -1,0 +1,3 @@
+from repro.analysis.lint import main
+
+raise SystemExit(main())

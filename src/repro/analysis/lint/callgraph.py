@@ -1,0 +1,172 @@
+"""Function index + hot-path reachability for the lint rules.
+
+The eager-host-op rule (RPL002) needs "is this function reachable from
+the decode round?".  The call graph here is deliberately simple --
+sound enough for a lint gate, cheap enough to run on every CI push:
+
+- **Nodes** are every ``def`` in the analyzed files (methods, nested
+  closures included), keyed by identity.
+- **Edges** resolve two call shapes: a bare ``name(...)`` call binds to
+  any function of the same *file* with that name, and a
+  ``self.attr(...)`` call binds to (a) same-class methods named
+  ``attr`` and (b) functions bound to ``self.attr`` anywhere in the
+  class (``self.attr = jax.jit(fn, ...)`` -- the serving engine's
+  jitted-closure idiom), resolved through the names referenced by the
+  binding's value expression.
+- **Roots** are matched by name: ``"Class.method"`` pins the class,
+  a bare ``"name"`` matches any function with that name.
+
+Cross-module calls through local variables (``runner.decode_round``)
+are not resolved; the rule's root set names those entry points
+directly instead.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.lint.core import FileSource, Project
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    file: FileSource
+    node: ast.AST                  # FunctionDef | AsyncFunctionDef
+    name: str
+    class_name: Optional[str]      # enclosing class, if any
+
+    @property
+    def qualname(self) -> str:
+        if self.class_name:
+            return f"{self.class_name}.{self.name}"
+        return self.name
+
+
+def own_nodes(func_node: ast.AST) -> Iterable[ast.AST]:
+    """All AST nodes of a function body, nested ``def``/``class``
+    bodies excluded (each nested def is its own graph node; lambdas
+    stay in -- they have no name to form an edge with)."""
+    stack = list(ast.iter_child_nodes(func_node))
+    while stack:
+        n = stack.pop()
+        if isinstance(n, _FUNC_NODES + (ast.ClassDef,)):
+            continue
+        yield n
+        stack.extend(ast.iter_child_nodes(n))
+
+
+class CallGraph:
+    def __init__(self, project: Project):
+        self.functions: List[FuncInfo] = []
+        # (file, name) -> funcs; (file, class, method) -> funcs
+        self._by_name: Dict[Tuple[int, str], List[FuncInfo]] = {}
+        self._by_method: Dict[Tuple[int, str, str], List[FuncInfo]] = {}
+        # (file, class, attr) -> function names its binding references
+        self._attr_bindings: Dict[Tuple[int, str, str], Set[str]] = {}
+        for fi, file in enumerate(project.files):
+            for node in ast.walk(file.tree):
+                if not isinstance(node, _FUNC_NODES):
+                    continue
+                cls = file.enclosing(node, ast.ClassDef)
+                info = FuncInfo(
+                    file=file,
+                    node=node,
+                    name=node.name,
+                    class_name=cls.name if cls is not None else None,
+                )
+                self.functions.append(info)
+                self._by_name.setdefault((fi, node.name), []).append(info)
+                if info.class_name:
+                    self._by_method.setdefault(
+                        (fi, info.class_name, node.name), []
+                    ).append(info)
+            # self.attr = <expr referencing functions> bindings
+            for node in ast.walk(file.tree):
+                if not isinstance(node, ast.Assign):
+                    continue
+                cls = file.enclosing(node, ast.ClassDef)
+                if cls is None:
+                    continue
+                names: Set[str] = set()
+                for n in ast.walk(node.value):
+                    if isinstance(n, ast.Name):
+                        names.add(n.id)
+                    elif isinstance(n, ast.Attribute) and _is_self(n.value):
+                        # self.m bound through a wrapper, e.g.
+                        # self._blk = self.tracing.jit(self._blk_impl)
+                        names.add(n.attr)
+                if not names:
+                    continue
+                for tgt in node.targets:
+                    elts = (
+                        tgt.elts
+                        if isinstance(tgt, (ast.Tuple, ast.List))
+                        else [tgt]
+                    )
+                    for t in elts:
+                        attr = _self_attr(t)
+                        if attr is not None:
+                            self._attr_bindings.setdefault(
+                                (fi, cls.name, attr), set()
+                            ).update(names)
+        self._file_index = {
+            id(file): fi for fi, file in enumerate(project.files)
+        }
+        self._edges: Dict[int, List[FuncInfo]] = {}
+        for info in self.functions:
+            self._edges[id(info.node)] = list(self._callees(info))
+
+    def _callees(self, info: FuncInfo) -> Iterable[FuncInfo]:
+        fi = self._file_index[id(info.file)]
+        for node in own_nodes(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Name):
+                yield from self._by_name.get((fi, f.id), [])
+            elif isinstance(f, ast.Attribute) and _is_self(f.value):
+                if info.class_name:
+                    yield from self._by_method.get(
+                        (fi, info.class_name, f.attr), []
+                    )
+                    for name in self._attr_bindings.get(
+                        (fi, info.class_name, f.attr), ()
+                    ):
+                        yield from self._by_name.get((fi, name), [])
+                        yield from self._by_method.get(
+                            (fi, info.class_name, name), []
+                        )
+
+    def reachable(self, roots: Sequence[str]) -> List[FuncInfo]:
+        """Functions reachable from any root spec (``"Class.method"``
+        or bare ``"name"``), the roots themselves included."""
+        class_roots = {r for r in roots if "." in r}
+        name_roots = {r for r in roots if "." not in r}
+        seen: Set[int] = set()
+        frontier = [
+            f for f in self.functions
+            if f.name in name_roots or f.qualname in class_roots
+        ]
+        out: List[FuncInfo] = []
+        while frontier:
+            f = frontier.pop()
+            if id(f.node) in seen:
+                continue
+            seen.add(id(f.node))
+            out.append(f)
+            frontier.extend(self._edges.get(id(f.node), ()))
+        return out
+
+
+def _is_self(node: ast.AST) -> bool:
+    return isinstance(node, ast.Name) and node.id == "self"
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """``self.attr`` target -> ``attr``, else None."""
+    if isinstance(node, ast.Attribute) and _is_self(node.value):
+        return node.attr
+    return None

@@ -1,0 +1,224 @@
+"""Lint driver: file loading, waiver parsing, findings, reporting.
+
+The static rules (``repro.analysis.lint.rules``) consume a
+:class:`Project` built here -- every analyzed file parsed once, with a
+parent map for enclosing-statement lookups -- and emit
+:class:`Finding`\\ s anchored to AST nodes.  The driver then resolves
+each finding against the file's waiver comments:
+
+    # lint: disable=RPL002 -- one-line justification
+
+A waiver on the finding's line, the line above it, the first line of
+the enclosing statement, or the line above *that*, waives the finding
+(multi-line statements can carry the comment above the statement).
+Waivers name rules by ID (``RPL002``) or slug
+(``eager-host-op-in-hot-path``), comma-separated.  A waiver without a
+justification (no ``-- text`` tail) does NOT waive: the policy is that
+every suppression explains itself, so the finding stays unwaived with
+a note saying why.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+_WAIVER_RE = re.compile(
+    r"#\s*lint:\s*disable=([A-Za-z0-9_,\- ]+?)\s*(?:--\s*(\S.*))?$"
+)
+
+# paths containing any of these parts are skipped by default: the lint
+# fixtures are *data* for the linter's own tests, deliberately bad
+DEFAULT_EXCLUDE_PARTS: Tuple[str, ...] = ("lint_fixtures",)
+
+
+@dataclasses.dataclass
+class Finding:
+    rule_id: str
+    slug: str
+    path: str
+    line: int
+    col: int
+    message: str
+    waived: bool = False
+    waiver_note: str = ""
+
+    def format(self) -> str:
+        tag = " (waived)" if self.waived else ""
+        note = f" [{self.waiver_note}]" if self.waiver_note else ""
+        return (
+            f"{self.path}:{self.line}:{self.col} "
+            f"{self.rule_id}[{self.slug}]{tag}: {self.message}{note}"
+        )
+
+
+class FileSource:
+    """One parsed source file: AST, parent map, and waiver comments."""
+
+    def __init__(self, path: str, source: Optional[str] = None):
+        self.path = str(path)
+        self.source = (
+            source if source is not None else Path(path).read_text()
+        )
+        self.lines = self.source.splitlines()
+        self.tree = ast.parse(self.source, filename=self.path)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        # line -> ({rule ids/slugs}, justification)
+        self.waivers: Dict[int, Tuple[Set[str], str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _WAIVER_RE.search(text)
+            if m:
+                rules = {
+                    r.strip() for r in m.group(1).split(",") if r.strip()
+                }
+                self.waivers[i] = (rules, (m.group(2) or "").strip())
+
+    def enclosing_stmt(self, node: ast.AST) -> Optional[ast.stmt]:
+        cur: Optional[ast.AST] = node
+        while cur is not None and not isinstance(cur, ast.stmt):
+            cur = self.parents.get(cur)
+        return cur
+
+    def enclosing(self, node: ast.AST, kinds) -> Optional[ast.AST]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, kinds):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+
+class Project:
+    """All files of one lint run (rules may resolve across them)."""
+
+    def __init__(self, files: Sequence[FileSource]):
+        self.files = list(files)
+
+
+def iter_py_files(
+    paths: Sequence[str],
+    exclude_parts: Sequence[str] = DEFAULT_EXCLUDE_PARTS,
+) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            cands = sorted(path.rglob("*.py"))
+        else:
+            cands = [path]
+        for c in cands:
+            if any(part in c.parts for part in exclude_parts):
+                continue
+            out.append(c)
+    return out
+
+
+def resolve_waivers(
+    file: FileSource, finding: Finding, node: ast.AST
+) -> None:
+    """Waive ``finding`` if a matching justified waiver comment covers
+    the node's line, the enclosing statement's first line, or the line
+    above either."""
+    stmt = file.enclosing_stmt(node)
+    lines = {finding.line, finding.line - 1}
+    if stmt is not None:
+        lines |= {stmt.lineno, stmt.lineno - 1}
+    matched_without_note = False
+    for line in sorted(lines, reverse=True):
+        entry = file.waivers.get(line)
+        if entry is None:
+            continue
+        rules, note = entry
+        if finding.rule_id not in rules and finding.slug not in rules:
+            continue
+        if note:
+            finding.waived = True
+            finding.waiver_note = note
+            return
+        matched_without_note = True
+    if matched_without_note:
+        finding.waiver_note = (
+            "waiver missing justification (use '-- reason')"
+        )
+
+
+def lint_paths(
+    paths: Sequence[str],
+    rules: Optional[Sequence[str]] = None,
+    exclude_parts: Sequence[str] = DEFAULT_EXCLUDE_PARTS,
+) -> List[Finding]:
+    """Run the rule set over ``paths`` (files or directories); returns
+    every finding, waived ones included (filter on ``.waived``).
+    ``rules`` restricts to a subset of rule IDs/slugs."""
+    from repro.analysis.lint.rules import RULES
+
+    files = [FileSource(str(p)) for p in iter_py_files(paths, exclude_parts)]
+    project = Project(files)
+    findings: List[Finding] = []
+    for rule in RULES:
+        if rules is not None and (
+            rule.rule_id not in rules and rule.slug not in rules
+        ):
+            continue
+        findings.extend(rule.check(project))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule_id))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    from repro.analysis.lint.rules import RULES
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="JAX-aware static lint for the repro tree "
+        "(DESIGN.md SS11). Exit 1 on any unwaived finding.",
+    )
+    ap.add_argument("paths", nargs="*", default=["src", "tests"])
+    ap.add_argument(
+        "--rules", default=None,
+        help="comma-separated rule IDs/slugs to run (default: all)",
+    )
+    ap.add_argument(
+        "--show-waived", action="store_true",
+        help="print waived findings too",
+    )
+    ap.add_argument(
+        "--include-fixtures", action="store_true",
+        help="lint tests/lint_fixtures too (excluded by default: the "
+        "bad fixtures exist to trip the rules)",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule table and exit",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES:
+            print(f"{rule.rule_id}  {rule.slug}: {rule.description}")
+        return 0
+
+    rule_filter = (
+        [r.strip() for r in args.rules.split(",")] if args.rules else None
+    )
+    exclude = () if args.include_fixtures else DEFAULT_EXCLUDE_PARTS
+    findings = lint_paths(
+        args.paths, rules=rule_filter, exclude_parts=exclude
+    )
+    unwaived = [f for f in findings if not f.waived]
+    shown = findings if args.show_waived else unwaived
+    for f in shown:
+        print(f.format())
+    n_waived = len(findings) - len(unwaived)
+    print(
+        f"lint: {len(findings)} finding(s), {n_waived} waived, "
+        f"{len(unwaived)} unwaived"
+    )
+    return 1 if unwaived else 0

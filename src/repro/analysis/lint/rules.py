@@ -1,0 +1,727 @@
+"""The five static rules (DESIGN.md SS11).
+
+=======  =========================  ==============================================
+ID       slug                       catches
+=======  =========================  ==============================================
+RPL001   donation-after-use         a variable passed at a ``donate_argnums``
+                                    position read after the call without
+                                    reassignment (PR 6's bug class)
+RPL002   eager-host-op-in-hot-path  ``np.asarray``/``.item()``/``int()``/
+                                    ``float()``/``jax.device_get`` in functions
+                                    reachable from the decode round
+RPL003   hardcoded-interpret        Pallas entry points pinning ``interpret``
+                                    to a literal instead of resolving through
+                                    ``kernels.common.default_interpret()``
+RPL004   unlocked-shared-write      writes to ``self._*`` of a threaded class
+                                    outside a ``with self.<lock/cond>`` block
+RPL005   jit-missing-static         ``jax.jit`` tracing a config-like argument
+                                    not covered by static_argnums/argnames
+=======  =========================  ==============================================
+
+Each rule walks the :class:`~repro.analysis.lint.core.Project` AST and
+anchors findings to precise source spans; the driver resolves
+``# lint: disable=RULE -- reason`` waivers per finding.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.lint.callgraph import CallGraph, FuncInfo, own_nodes
+from repro.analysis.lint.core import (
+    FileSource,
+    Finding,
+    Project,
+    resolve_waivers,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    rule_id: str
+    slug: str
+    description: str
+    check_fn: Callable[["Rule", Project], List[Finding]]
+
+    def check(self, project: Project) -> List[Finding]:
+        return self.check_fn(self, project)
+
+    def finding(
+        self, file: FileSource, node: ast.AST, message: str
+    ) -> Finding:
+        f = Finding(
+            rule_id=self.rule_id,
+            slug=self.slug,
+            path=file.path,
+            line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0),
+            message=message,
+        )
+        resolve_waivers(file, f, node)
+        return f
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``Name``/``Attribute`` chain rooted at a Name -> ``"a.b.c"``;
+    anything else (subscripts, calls) is untrackable -> None."""
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if not isinstance(cur, ast.Name):
+        return None
+    parts.append(cur.id)
+    return ".".join(reversed(parts))
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    """``jax.jit(...)``, bare ``jit(...)``, or any ``<obj>.jit(...)``
+    (the TraceCounter.jit wrapper forwards its jit kwargs)."""
+    f = node.func
+    if isinstance(f, ast.Name) and f.id == "jit":
+        return True
+    if isinstance(f, ast.Attribute) and f.attr == "jit":
+        return True
+    return False
+
+
+def _literal_ints(node: ast.AST) -> Optional[Set[int]]:
+    """Literal int / tuple-of-int (conditional expressions fold to the
+    union of both arms) -> the index set; unresolvable -> None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: Set[int] = set()
+        for e in node.elts:
+            got = _literal_ints(e)
+            if got is None:
+                return None
+            out |= got
+        return out
+    if isinstance(node, ast.IfExp):
+        a = _literal_ints(node.body)
+        b = _literal_ints(node.orelse)
+        if a is None or b is None:
+            return None
+        return a | b
+    return None
+
+
+def _literal_strs(node: ast.AST) -> Optional[Set[str]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: Set[str] = set()
+        for e in node.elts:
+            got = _literal_strs(e)
+            if got is None:
+                return None
+            out |= got
+        return out
+    return None
+
+
+def _pos(node: ast.AST) -> Tuple[int, int]:
+    return (getattr(node, "lineno", 0), getattr(node, "col_offset", 0))
+
+
+def _end_pos(node: ast.AST) -> Tuple[int, int]:
+    return (
+        getattr(node, "end_lineno", getattr(node, "lineno", 0)),
+        getattr(node, "end_col_offset", 0),
+    )
+
+
+def _target_names(stmt: ast.stmt) -> Set[str]:
+    """Dotted names assigned by a statement's targets."""
+    out: Set[str] = set()
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, ast.For):
+        targets = [stmt.target]
+    for t in targets:
+        stack = [t]
+        while stack:
+            n = stack.pop()
+            if isinstance(n, (ast.Tuple, ast.List)):
+                stack.extend(n.elts)
+                continue
+            d = _dotted(n)
+            if d is not None:
+                out.add(d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL001 donation-after-use
+# ---------------------------------------------------------------------------
+
+
+def _donation_bindings(
+    file: FileSource,
+) -> Dict[Tuple[str, Optional[str], str], Set[int]]:
+    """Map of jitted-with-donation bindings in one file.
+
+    Keys: ``("name", None, n)`` for ``n = jax.jit(..., donate_argnums=...)``
+    and ``("attr", Class, a)`` for ``self.a = jax.jit(...)`` inside
+    class ``Class``.  Values: the donated positional indices (literal,
+    with conditional expressions folded to the union of both arms)."""
+    out: Dict[Tuple[str, Optional[str], str], Set[int]] = {}
+    for node in ast.walk(file.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        val = node.value
+        if not isinstance(val, ast.Call) or not _is_jit_call(val):
+            continue
+        donated: Optional[Set[int]] = None
+        for kw in val.keywords:
+            if kw.arg == "donate_argnums":
+                donated = _literal_ints(kw.value)
+        if not donated:
+            continue
+        cls = file.enclosing(node, ast.ClassDef)
+        for tgt in node.targets:
+            elts = (
+                tgt.elts
+                if isinstance(tgt, (ast.Tuple, ast.List))
+                else [tgt]
+            )
+            for t in elts:
+                if isinstance(t, ast.Name):
+                    out[("name", None, t.id)] = donated
+                elif (
+                    isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"
+                    and cls is not None
+                ):
+                    out[("attr", cls.name, t.attr)] = donated
+    return out
+
+
+def _check_donation_after_use(rule: Rule, project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for file in project.files:
+        bindings = _donation_bindings(file)
+        if not bindings:
+            continue
+        funcs = [
+            n for n in ast.walk(file.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+        for fn in funcs:
+            cls = file.enclosing(fn, ast.ClassDef)
+            cls_name = cls.name if cls is not None else None
+            for call in own_nodes(fn):
+                if not isinstance(call, ast.Call):
+                    continue
+                donated = _donated_positions(call, cls_name, bindings)
+                if not donated:
+                    continue
+                findings.extend(
+                    _scan_uses_after(rule, file, fn, call, donated)
+                )
+    return findings
+
+
+def _donated_positions(
+    call: ast.Call,
+    cls_name: Optional[str],
+    bindings: Dict[Tuple[str, Optional[str], str], Set[int]],
+) -> Optional[Set[int]]:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return bindings.get(("name", None, f.id))
+    if (
+        isinstance(f, ast.Attribute)
+        and isinstance(f.value, ast.Name)
+        and f.value.id == "self"
+    ):
+        return bindings.get(("attr", cls_name, f.attr))
+    return None
+
+
+def _scan_uses_after(
+    rule: Rule,
+    file: FileSource,
+    fn: ast.AST,
+    call: ast.Call,
+    donated: Set[int],
+) -> List[Finding]:
+    """Flag reads of a donated argument after the call, unless the
+    call's own statement (or a later statement before the read)
+    reassigns it.  The scan is positional (source order) and stops at
+    the first ``return``/``raise`` after the call -- reads past an
+    exit belong to sibling branches."""
+    stmt = file.enclosing_stmt(call)
+    if stmt is None:
+        return []
+    reassigned = _target_names(stmt)
+    names = {
+        _dotted(call.args[p])
+        for p in donated
+        if p < len(call.args)
+    }
+    names = {n for n in names if n is not None and n not in reassigned}
+    if not names:
+        return []
+    after = _end_pos(stmt)
+    # events after the call: loads and stores of each donated name, and
+    # control-flow exits
+    events: List[Tuple[Tuple[int, int], str, ast.AST, Optional[str]]] = []
+    for node in own_nodes(fn):
+        pos = _pos(node)
+        if pos <= after:
+            continue
+        if isinstance(node, (ast.Return, ast.Raise)):
+            events.append((pos, "exit", node, None))
+            continue
+        if not isinstance(node, (ast.Name, ast.Attribute)):
+            continue
+        d = _dotted(node)
+        if d not in names:
+            continue
+        kind = (
+            "store"
+            if isinstance(node.ctx, (ast.Store, ast.Del))
+            else "load"
+        )
+        events.append((pos, kind, node, d))
+    events.sort(key=lambda e: e[0])
+    findings: List[Finding] = []
+    open_names = set(names)
+    for _pos_, kind, node, d in events:
+        if kind == "exit":
+            break
+        if d not in open_names:
+            continue
+        if kind == "store":
+            open_names.discard(d)
+            continue
+        findings.append(
+            rule.finding(
+                file,
+                node,
+                f"'{d}' was donated into the jitted call at line "
+                f"{call.lineno} (donate_argnums) and is read here "
+                "without reassignment -- its buffer no longer exists",
+            )
+        )
+        open_names.discard(d)   # one finding per donated name
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPL002 eager-host-op-in-hot-path
+# ---------------------------------------------------------------------------
+
+# decode-round entry points; bare names match any class (the serving
+# engine's device step, the staged runner's round/block methods, the
+# stage-thread loop and its run_stage callbacks)
+HOT_PATH_ROOTS: Tuple[str, ...] = (
+    "_step_device",
+    "decode_round",
+    "decode_block",
+    "_decode_block_coalesced",
+    "_run_stage",
+    "_finish_group",
+    "_stage_loop",
+    "run_stage",
+)
+
+
+def _host_op(node: ast.Call) -> Optional[str]:
+    f = node.func
+    if isinstance(f, ast.Name) and f.id in ("int", "float"):
+        return f"{f.id}()"
+    if isinstance(f, ast.Attribute):
+        if f.attr == "item":
+            return ".item()"
+        if isinstance(f.value, ast.Name):
+            if f.value.id in ("np", "numpy") and f.attr in (
+                "asarray", "array"
+            ):
+                return f"{f.value.id}.{f.attr}()"
+            if f.value.id == "jax" and f.attr == "device_get":
+                return "jax.device_get()"
+    return None
+
+
+def _check_eager_host_op(rule: Rule, project: Project) -> List[Finding]:
+    graph = CallGraph(project)
+    findings: List[Finding] = []
+    for info in graph.reachable(HOT_PATH_ROOTS):
+        for node in own_nodes(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            op = _host_op(node)
+            if op is None:
+                continue
+            findings.append(
+                rule.finding(
+                    info.file,
+                    node,
+                    f"{op} in '{info.qualname}', reachable from the "
+                    "decode round -- forces a host sync on the hot "
+                    "path",
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPL003 hardcoded-interpret
+# ---------------------------------------------------------------------------
+
+
+def _check_hardcoded_interpret(rule: Rule, project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for file in project.files:
+        for node in ast.walk(file.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                findings.extend(_interpret_defaults(rule, file, node))
+            elif isinstance(node, ast.Call):
+                f = node.func
+                name = (
+                    f.attr if isinstance(f, ast.Attribute)
+                    else f.id if isinstance(f, ast.Name) else None
+                )
+                if name != "pallas_call":
+                    continue
+                for kw in node.keywords:
+                    if (
+                        kw.arg == "interpret"
+                        and isinstance(kw.value, ast.Constant)
+                        and isinstance(kw.value.value, bool)
+                    ):
+                        findings.append(
+                            rule.finding(
+                                file,
+                                kw.value,
+                                "pallas_call pins interpret="
+                                f"{kw.value.value}; thread the caller's "
+                                "resolved flag (kernels.common."
+                                "default_interpret) instead",
+                            )
+                        )
+    return findings
+
+
+def _interpret_defaults(
+    rule: Rule, file: FileSource, fn
+) -> List[Finding]:
+    out: List[Finding] = []
+    args = fn.args
+    pos_args = args.posonlyargs + args.args
+    defaults = args.defaults
+    offset = len(pos_args) - len(defaults)
+    pairs = [
+        (a, d)
+        for a, d in zip(pos_args[offset:], defaults)
+    ] + [
+        (a, d)
+        for a, d in zip(args.kwonlyargs, args.kw_defaults)
+        if d is not None
+    ]
+    for a, d in pairs:
+        if (
+            a.arg == "interpret"
+            and isinstance(d, ast.Constant)
+            and isinstance(d.value, bool)
+        ):
+            out.append(
+                rule.finding(
+                    file,
+                    d,
+                    f"'{fn.name}' hardcodes interpret={d.value}; "
+                    "default to None and resolve via "
+                    "kernels.common.default_interpret() so the "
+                    "backend/env override applies",
+                )
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL004 unlocked-shared-write
+# ---------------------------------------------------------------------------
+
+_LOCK_FACTORY = ("Lock", "RLock", "Condition")
+_INSTRUMENT_FACTORY = ("instrument_lock", "instrument_condition")
+_LOCK_ATTR_RE = re.compile(r"lock|cond|mutex", re.IGNORECASE)
+
+
+def _threaded_class_locks(cls: ast.ClassDef) -> Optional[Set[str]]:
+    """None if the class is not threaded; else the set of its lock/cond
+    attribute names.  A class is *threaded* when it creates a
+    ``threading.Lock/RLock/Condition`` (or a sanitize-instrumented
+    one), or spawns ``threading.Thread`` workers."""
+    locks: Set[str] = set()
+    threaded = False
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        name = (
+            f.attr if isinstance(f, ast.Attribute)
+            else f.id if isinstance(f, ast.Name) else None
+        )
+        if name == "Thread":
+            threaded = True
+        if name in _LOCK_FACTORY or name in _INSTRUMENT_FACTORY:
+            threaded = True
+    if not threaded:
+        return None
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Assign):
+            continue
+        val = node.value
+        if not isinstance(val, ast.Call):
+            continue
+        f = val.func
+        name = (
+            f.attr if isinstance(f, ast.Attribute)
+            else f.id if isinstance(f, ast.Name) else None
+        )
+        if name not in _LOCK_FACTORY and name not in _INSTRUMENT_FACTORY:
+            continue
+        for tgt in node.targets:
+            if (
+                isinstance(tgt, ast.Attribute)
+                and isinstance(tgt.value, ast.Name)
+                and tgt.value.id == "self"
+            ):
+                locks.add(tgt.attr)
+    return locks
+
+
+def _under_lock(
+    file: FileSource, node: ast.AST, lock_attrs: Set[str]
+) -> bool:
+    """Is ``node`` inside a ``with self.<lock>`` block?"""
+    cur = file.parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return False
+        if isinstance(cur, ast.With):
+            for item in cur.items:
+                ctx = item.context_expr
+                if (
+                    isinstance(ctx, ast.Attribute)
+                    and isinstance(ctx.value, ast.Name)
+                    and ctx.value.id == "self"
+                    and (
+                        ctx.attr in lock_attrs
+                        or _LOCK_ATTR_RE.search(ctx.attr)
+                    )
+                ):
+                    return True
+        cur = file.parents.get(cur)
+    return False
+
+
+def _check_unlocked_shared_write(
+    rule: Rule, project: Project
+) -> List[Finding]:
+    findings: List[Finding] = []
+    for file in project.files:
+        for cls in ast.walk(file.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            locks = _threaded_class_locks(cls)
+            if locks is None:
+                continue
+            for method in cls.body:
+                if not isinstance(
+                    method, (ast.FunctionDef, ast.AsyncFunctionDef)
+                ):
+                    continue
+                if method.name == "__init__":
+                    continue   # constructor runs before threads exist
+                for node in ast.walk(method):
+                    tgt = _shared_write_target(node)
+                    if tgt is None:
+                        continue
+                    if tgt in locks:
+                        continue
+                    if _under_lock(file, node, locks):
+                        continue
+                    findings.append(
+                        rule.finding(
+                            file,
+                            node,
+                            f"write to 'self.{tgt}' in threaded class "
+                            f"'{cls.name}.{method.name}' outside a "
+                            "'with self.<lock>' block",
+                        )
+                    )
+    return findings
+
+
+def _shared_write_target(node: ast.AST) -> Optional[str]:
+    """``self._x = ...`` / ``self._x[k] = ...`` / ``self._x += ...``
+    store target -> ``_x``; anything else None."""
+    if not isinstance(node, (ast.Attribute, ast.Subscript)):
+        return None
+    if not isinstance(getattr(node, "ctx", None), (ast.Store, ast.Del)):
+        return None
+    base = node.value if isinstance(node, ast.Subscript) else node
+    if isinstance(node, ast.Subscript):
+        if not isinstance(base, ast.Attribute):
+            return None
+    if (
+        isinstance(base, ast.Attribute)
+        and isinstance(base.value, ast.Name)
+        and base.value.id == "self"
+        and base.attr.startswith("_")
+    ):
+        return base.attr
+    return None
+
+
+# ---------------------------------------------------------------------------
+# RPL005 jit-missing-static
+# ---------------------------------------------------------------------------
+
+_CONFIG_PARAM_RE = re.compile(r"^(cfg|config|mcfg)$|(_cfg|_config)$")
+
+
+def _check_jit_missing_static(rule: Rule, project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for file in project.files:
+        defs = {
+            n.name: n
+            for n in ast.walk(file.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        methods: Dict[Tuple[str, str], ast.AST] = {}
+        for cls in ast.walk(file.tree):
+            if isinstance(cls, ast.ClassDef):
+                for m in cls.body:
+                    if isinstance(
+                        m, (ast.FunctionDef, ast.AsyncFunctionDef)
+                    ):
+                        methods[(cls.name, m.name)] = m
+        for node in ast.walk(file.tree):
+            if not isinstance(node, ast.Call) or not _is_jit_call(node):
+                continue
+            if not node.args:
+                continue
+            target = node.args[0]
+            params, skip_self = _jit_target_params(
+                file, node, target, defs, methods
+            )
+            if params is None:
+                continue
+            static_idx: Set[int] = set()
+            static_names: Set[str] = set()
+            for kw in node.keywords:
+                if kw.arg == "static_argnums":
+                    static_idx |= _literal_ints(kw.value) or set()
+                if kw.arg == "static_argnames":
+                    static_names |= _literal_strs(kw.value) or set()
+            for i, pname in enumerate(params):
+                if not _CONFIG_PARAM_RE.search(pname):
+                    continue
+                if i in static_idx or pname in static_names:
+                    continue
+                findings.append(
+                    rule.finding(
+                        file,
+                        node,
+                        f"jax.jit traces config-like argument "
+                        f"'{pname}' (position {i}); mark it static "
+                        "(static_argnums/static_argnames) or close "
+                        "over it",
+                    )
+                )
+    return findings
+
+
+def _jit_target_params(
+    file: FileSource,
+    call: ast.Call,
+    target: ast.AST,
+    defs: Dict[str, ast.AST],
+    methods: Dict[Tuple[str, str], ast.AST],
+) -> Tuple[Optional[List[str]], bool]:
+    """Positional parameter names of the jitted callable, ``self``
+    dropped for bound methods; (None, False) when unresolvable."""
+    if isinstance(target, ast.Lambda):
+        return [a.arg for a in target.args.args], False
+    if isinstance(target, ast.Name):
+        fn = defs.get(target.id)
+        if fn is None:
+            return None, False
+        names = [a.arg for a in fn.args.args]
+        return names, False
+    if (
+        isinstance(target, ast.Attribute)
+        and isinstance(target.value, ast.Name)
+        and target.value.id == "self"
+    ):
+        cls = file.enclosing(call, ast.ClassDef)
+        if cls is None:
+            return None, False
+        fn = methods.get((cls.name, target.attr))
+        if fn is None:
+            return None, False
+        names = [a.arg for a in fn.args.args]
+        if names and names[0] == "self":
+            names = names[1:]
+        return names, True
+    return None, False
+
+
+# ---------------------------------------------------------------------------
+# the rule table
+# ---------------------------------------------------------------------------
+
+RULES: Tuple[Rule, ...] = (
+    Rule(
+        "RPL001",
+        "donation-after-use",
+        "variable passed at a donate_argnums position is read after "
+        "the call without reassignment",
+        _check_donation_after_use,
+    ),
+    Rule(
+        "RPL002",
+        "eager-host-op-in-hot-path",
+        "np.asarray/.item()/int()/float()/jax.device_get inside "
+        "functions reachable from the decode round",
+        _check_eager_host_op,
+    ),
+    Rule(
+        "RPL003",
+        "hardcoded-interpret",
+        "Pallas entry points pin interpret to a literal instead of "
+        "resolving kernels.common.default_interpret()",
+        _check_hardcoded_interpret,
+    ),
+    Rule(
+        "RPL004",
+        "unlocked-shared-write",
+        "write to self._* of a threaded executor class outside a "
+        "'with self.<lock/cond>' block",
+        _check_unlocked_shared_write,
+    ),
+    Rule(
+        "RPL005",
+        "jit-missing-static",
+        "jax.jit call site traces a config-like argument not covered "
+        "by static_argnums/static_argnames",
+        _check_jit_missing_static,
+    ),
+)

@@ -177,6 +177,7 @@ class CheckpointManager:
             self._write(step, host_state, extra)
             return
         self.wait()  # one in-flight write at a time
+        # lint: disable=RPL004 -- owner thread; wait() above joined any in-flight writer
         self._thread = threading.Thread(
             target=self._write, args=(step, host_state, extra), daemon=True
         )
@@ -187,13 +188,16 @@ class CheckpointManager:
             save(self.base, step, host_state, extra)
             self._gc()
         except BaseException as e:  # surfaced on next wait()
+            # lint: disable=RPL004 -- writer thread; owner only reads after join() in wait()
             self._error = e
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
+            # lint: disable=RPL004 -- owner thread, writer joined on the line above
             self._thread = None
         if self._error is not None:
+            # lint: disable=RPL004 -- owner thread, after join(): the writer is gone
             err, self._error = self._error, None
             raise err
 

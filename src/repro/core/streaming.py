@@ -22,6 +22,7 @@ from typing import (
 
 import numpy as np
 
+from repro.analysis import sanitize
 from repro.core.pu import PUConfig, TileCost
 from repro.core import scheduler as sched
 
@@ -164,7 +165,10 @@ class StageStreamCore:
         self.names = list(names) if names is not None else [
             str(i) for i in range(len(self.costs))
         ]
-        self._cond = threading.Condition()
+        # under REPRO_SANITIZE=1 the condition feeds the lock-order
+        # recorder (one class-level name: ordering is a property of the
+        # code, not the instance); otherwise a plain Condition
+        self._cond = sanitize.instrument_condition("StageStreamCore._cond")
         self._resident: Dict[int, Any] = {}
         self._resident_bytes = 0
         self._qpos = 0

@@ -35,6 +35,7 @@ import numpy as np
 
 import jax
 
+from repro.analysis import sanitize
 from repro.configs import ARCH_IDS, get_config, smoke_variant
 from repro.core.aimc import AIMCNoiseModel
 from repro.core.pu import host_offload_config, tpu_v5e_config
@@ -171,6 +172,12 @@ def main() -> int:
         )
     stats = engine.stats()
     print(json.dumps(stats, indent=1, default=float))
+    if sanitize.enabled():
+        violations = sanitize.lock_violations()
+        for v in violations:
+            print(f"sanitize: {v.kind} violation {v.first}->{v.second or '?'} at {v.site}")
+        if violations:
+            return 2
     return 0
 
 

@@ -52,6 +52,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+from repro.analysis import sanitize
 from repro.core.streaming import StageStreamCore
 from repro.plan.partition import PartitionedPlan, StagePlan
 
@@ -238,6 +239,7 @@ class PipelineSession:
         f = self._frames_in
         rid = f if round_id is None else round_id
         self.qs[0].put((f, payload, float(ready_t), float(scale), rid))
+        # lint: disable=RPL004 -- owner-thread only by contract (put/get/close share one caller thread)
         self._frames_in += 1
         return f
 
@@ -255,6 +257,7 @@ class PipelineSession:
             )
             raise err
         frame, payload, end_t, _scale, _rid = item
+        # lint: disable=RPL004 -- owner-thread only by contract (put/get/close share one caller thread)
         self._done_t[frame] = end_t
         return frame, payload, end_t
 
@@ -282,6 +285,7 @@ class PipelineSession:
                 pass
         for t in self.threads:
             t.join(timeout=5.0)
+        # lint: disable=RPL004 -- owner thread, and all stage threads just joined
         self._closed = True
         raise err from None
 
@@ -289,6 +293,7 @@ class PipelineSession:
         """Shut the pipeline down and build the report.  Raises the
         first stage error if any frame failed."""
         if not self._closed:
+            # lint: disable=RPL004 -- owner-thread only by contract; stages only read via queue sentinels
             self._closed = True
             self.qs[0].put(None)
             deadline = time.monotonic() + 120.0
@@ -302,9 +307,11 @@ class PipelineSession:
                 if item is _FAILED:
                     continue
                 frame, _payload, end_t, _scale, _rid = item
+                # lint: disable=RPL004 -- owner thread draining after the close sentinel
                 self._done_t[frame] = end_t   # owner never collected it
             for t in self.threads:
                 t.join(timeout=60.0)
+            # lint: disable=RPL004 -- owner thread, stage threads joined above
             self._wall = time.perf_counter() - self._t0
         if self.errors:
             raise self.errors[0]
@@ -369,13 +376,18 @@ class StagePipelineExecutor:
             )
         self.queue_depth = queue_depth
         self.record_fetch_orders = record_fetch_orders
-        self._active_lock = threading.Lock()
+        # under REPRO_SANITIZE=1 the lock feeds the lock-order recorder
+        # (class-level name, like StageStreamCore._cond)
+        self._active_lock = sanitize.instrument_lock(
+            "StagePipelineExecutor._active_lock"
+        )
         self._active = 0
         self._max_active = 0
         self._live_cores: Dict[int, StageStreamCore] = {}
 
     def _enter_frame(self) -> None:
         with self._active_lock:
+            sanitize.require_held(self._active_lock)
             self._active += 1
             self._max_active = max(self._max_active, self._active)
 

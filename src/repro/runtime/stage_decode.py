@@ -405,7 +405,7 @@ class StagedDecodeRunner:
                     self.bound_params, self.stage_params[0],
                     self.stage_caches[0][g], st,
                 )
-                self._finish_group(g, st, out)
+                self._finish_group(g, out)
                 return g
             x, self.stage_caches[0][g] = self._cell_first(
                 self.bound_params, self.stage_params[0],
@@ -423,16 +423,22 @@ class StagedDecodeRunner:
             self.bound_params, self.stage_params[k], x,
             self.stage_caches[k][g], st,
         )
-        self._finish_group(g, st, out)
+        self._finish_group(g, out)
         return g
 
-    def _finish_group(self, g: int, st, out) -> None:
+    def _finish_group(self, g: int, out) -> None:
         """Apply the frame's state transition on the last-stage thread:
         ``out`` is the fused new state when ``postdecode`` is bound,
-        else the logits handed to the block's ``update`` callback."""
+        else the logits handed to the block's ``update`` callback.
+        The non-fused branch re-reads the group state from
+        ``_block_groups[g]`` itself: the cells only donate the state
+        when the transition is fused, so the slot still holds live
+        buffers here, and not threading ``st`` through the caller keeps
+        every read on the safe side of the donation."""
         if self._postdecode is not None:
             self._block_groups[g] = out
         elif self._block_update is not None:
+            st = self._block_groups[g]
             self._block_groups[g] = self._block_update(g, st, out)
         else:
             raise ValueError(
@@ -472,6 +478,23 @@ class StagedDecodeRunner:
             self.clock_ok = False
         logits, _, _ = report.outputs[0]
         return logits
+
+    def _expected_drains(self, M: int, n_rounds: int) -> Tuple[float, ...]:
+        """Per-frame expected drain times of an (M, n_rounds) block as
+        host floats.  The analytic recurrence yields numpy scalars;
+        converting once here, when a block shape is first seen, keeps
+        per-frame clock checks free of host conversions on the decode
+        hot path."""
+        key = (M, n_rounds)
+        cached = self._expected_block.get(key)
+        if cached is None:
+            drains = self.plan.decode_pipeline_events(
+                M, n_rounds, 1.0 / M
+            )[-1]
+            # lint: disable=RPL002 -- one-time fill per block shape, a compile-like boundary, not per-frame
+            cached = tuple(float(t) for t in drains)
+            self._expected_block[key] = cached
+        return cached
 
     def decode_block(
         self,
@@ -523,12 +546,7 @@ class StagedDecodeRunner:
         ):
             return self._decode_block_coalesced(groups, n_rounds)
         scale = 1.0 / M
-        key = (M, n_rounds)
-        if key not in self._expected_block:
-            self._expected_block[key] = self.plan.decode_pipeline_events(
-                M, n_rounds, scale
-            )[-1]
-        expected = self._expected_block[key]
+        expected = self._expected_drains(M, n_rounds)
 
         if self._session is None:
             self._session = self._executor.open_session(
@@ -549,7 +567,7 @@ class StagedDecodeRunner:
             for _ in range(n_rounds * M):
                 frame, g, end_t = session.get()
                 r = (frame - base) // M
-                want = t0 + float(expected[frame - base])
+                want = t0 + expected[frame - base]
                 tol = 1e-9 * max(1.0, abs(want))
                 if abs(end_t - want) > tol:
                     self.clock_ok = False
@@ -642,12 +660,7 @@ class StagedDecodeRunner:
         # engine inspects drained state), so the next block's recurrence
         # starts with all M frames ready at the previous block's last
         # drain -- spans of consecutive blocks simply add
-        key = (M, n_rounds)
-        if key not in self._expected_block:
-            self._expected_block[key] = self.plan.decode_pipeline_events(
-                M, n_rounds, 1.0 / M
-            )[-1]
-        self._co_span += float(self._expected_block[key][-1])
+        self._co_span += self._expected_drains(M, n_rounds)[-1]
         return groups
 
     def flush(self) -> None:

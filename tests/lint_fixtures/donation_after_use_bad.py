@@ -1,0 +1,31 @@
+"""RPL001 bad fixture: PR 6's bug class, reconstructed.
+
+A scan-block's inputs are donated (`donate_argnums=(1, 2)`), then the
+caller reads the donated cache/state objects after the call -- in the
+real engine this forced XLA to re-specialize layouts and recompile the
+block on every barrier (20-69 ms each)."""
+import jax
+
+
+def _block_impl(params, cache, state, n_rounds):
+    return cache, state
+
+
+class Engine:
+    def __init__(self, params):
+        self.params = params
+        self.cache = {"k": None}
+        self.state = {"tokens": None}
+        self._block = jax.jit(
+            _block_impl, static_argnums=3, donate_argnums=(1, 2)
+        )
+
+    def step(self, n_rounds):
+        out_cache, out_state = self._block(
+            self.params, self.cache, self.state, n_rounds
+        )
+        # BUG: self.cache / self.state were donated -- their buffers
+        # are gone; these eager reads force a layout re-specialization
+        emitted = self.cache["k"]
+        flags = self.state["tokens"]
+        return out_cache, out_state, emitted, flags

@@ -1,0 +1,25 @@
+"""RPL001 good fixture: reassign the donated names at the call, then
+read the *new* buffers (the device-resident idiom)."""
+import jax
+
+
+def _block_impl(params, cache, state, n_rounds):
+    return cache, state
+
+
+class Engine:
+    def __init__(self, params):
+        self.params = params
+        self.cache = {"k": None}
+        self.state = {"tokens": None}
+        self._block = jax.jit(
+            _block_impl, static_argnums=3, donate_argnums=(1, 2)
+        )
+
+    def step(self, n_rounds):
+        self.cache, self.state = self._block(
+            self.params, self.cache, self.state, n_rounds
+        )
+        emitted = self.cache["k"]
+        flags = self.state["tokens"]
+        return emitted, flags

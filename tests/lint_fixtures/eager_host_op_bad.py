@@ -1,0 +1,14 @@
+"""RPL002 bad fixture: eager host ops inside the decode round and in a
+helper it calls."""
+import numpy as np
+
+
+class Runner:
+    def _tick(self, state):
+        # reachable helper: np.asarray pulls device data to the host
+        return np.asarray(state["pos"])
+
+    def decode_round(self, tokens, pos):
+        n = int(pos[0])          # host sync per round
+        host_pos = self._tick({"pos": pos})
+        return tokens, n, host_pos

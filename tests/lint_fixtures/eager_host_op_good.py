@@ -1,0 +1,17 @@
+"""RPL002 good fixture: the round stays on device; the host sync lives
+at the block boundary (a function *not* reachable from the round)."""
+import numpy as np
+
+
+class Runner:
+    def _tick(self, state):
+        return state["pos"] + 1
+
+    def decode_round(self, tokens, pos):
+        pos = self._tick({"pos": pos})
+        return tokens, pos
+
+    def drain_block(self, state):
+        # block-boundary sync: not a decode-round root, not called
+        # from one
+        return np.asarray(state["out"])

@@ -1,0 +1,10 @@
+"""RPL003 bad fixture: a kernel entry point pins interpret=True and a
+pallas_call passes a literal, bypassing default_interpret()."""
+
+
+def pallas_call(fn, interpret=False):
+    return fn
+
+
+def my_kernel(x, interpret=True):
+    return pallas_call(lambda ref: ref, interpret=True)

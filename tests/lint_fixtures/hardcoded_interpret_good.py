@@ -1,0 +1,16 @@
+"""RPL003 good fixture: interpret defaults to None and resolves
+through the backend-aware default at call time."""
+
+
+def pallas_call(fn, interpret=None):
+    return fn
+
+
+def default_interpret():
+    return False
+
+
+def my_kernel(x, interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
+    return pallas_call(lambda ref: ref, interpret=interpret)

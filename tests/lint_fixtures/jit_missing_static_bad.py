@@ -1,0 +1,11 @@
+"""RPL005 bad fixture: a config object is traced instead of being
+marked static (every distinct config retraces, and hashing fails for
+mutable configs)."""
+import jax
+
+
+def step(cfg, params, batch):
+    return params
+
+
+step_jit = jax.jit(step)

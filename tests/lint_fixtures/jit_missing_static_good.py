@@ -1,0 +1,9 @@
+"""RPL005 good fixture: the config argument is static."""
+import jax
+
+
+def step(cfg, params, batch):
+    return params
+
+
+step_jit = jax.jit(step, static_argnums=(0,))

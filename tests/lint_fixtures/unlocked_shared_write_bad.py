@@ -1,0 +1,17 @@
+"""RPL004 bad fixture: a threaded class mutates shared state outside
+its lock."""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0
+        self._thread = threading.Thread(target=self._run)
+
+    def _run(self):
+        self._count += 1      # BUG: races with bump()
+
+    def bump(self):
+        with self._lock:
+            self._count += 1

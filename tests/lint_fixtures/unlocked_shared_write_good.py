@@ -1,0 +1,17 @@
+"""RPL004 good fixture: every shared write happens under the lock."""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0
+        self._thread = threading.Thread(target=self._run)
+
+    def _run(self):
+        with self._lock:
+            self._count += 1
+
+    def bump(self):
+        with self._lock:
+            self._count += 1

@@ -1,0 +1,240 @@
+"""Runtime sanitizer library (DESIGN.md SS11): TraceCounter /
+retrace_guard semantics, the transfer-guard tripwire, and the
+lock-order recorder -- plus one end-to-end serve under
+``REPRO_SANITIZE=1`` with instrumented executor locks."""
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import sanitize
+from repro.analysis.sanitize import (
+    LockOrderViolation,
+    RetraceError,
+    TraceCounter,
+    instrument_condition,
+    instrument_lock,
+    lock_violations,
+    require_held,
+    reset_lock_monitor,
+    retrace_guard,
+    transfer_guard,
+)
+
+
+# ---------------------------------------------------------------------------
+# TraceCounter / retrace_guard
+# ---------------------------------------------------------------------------
+
+
+def test_trace_counter_bumps_only_at_trace_time():
+    tc = TraceCounter(("decode",))
+    fn = jax.jit(tc.wrap("decode", lambda x: x + 1))
+    fn(jnp.zeros((2,)))
+    fn(jnp.ones((2,)))            # same shape: compiled, no re-trace
+    assert tc.counts["decode"] == 1
+    fn(jnp.zeros((3,)))           # new shape: re-traces
+    assert tc.counts["decode"] == 2
+
+
+def test_trace_counter_jit_is_wrap_plus_jit():
+    tc = TraceCounter()
+    fn = tc.jit(lambda x: x * 2, kind="decode")
+    assert fn(jnp.asarray(2.0)) == 4.0
+    assert tc.counts == {"decode": 1}
+    assert tc.total() == 1
+
+
+def test_retrace_guard_passes_when_flat():
+    tc = TraceCounter(("decode",))
+    fn = jax.jit(tc.wrap("decode", lambda x: x + 1))
+    fn(jnp.zeros((2,)))           # warm
+    with retrace_guard(tc):
+        fn(jnp.ones((2,)))
+        fn(jnp.zeros((2,)))
+
+
+def test_retrace_guard_raises_with_per_kind_delta():
+    tc = TraceCounter(("decode",))
+    fn = jax.jit(tc.wrap("decode", lambda x: x + 1))
+    with pytest.raises(RetraceError, match=r"decode.*1|1.*decode"):
+        with retrace_guard(tc):
+            fn(jnp.zeros((2,)))
+
+
+def test_retrace_guard_allowance_and_kind_filter():
+    tc = TraceCounter()
+    with retrace_guard(tc, max_new_traces=2):
+        tc.bump("decode")
+        tc.bump("decode")
+    with retrace_guard(tc, kinds=("prefill",)):
+        tc.bump("decode")         # other kinds don't count
+
+
+# ---------------------------------------------------------------------------
+# transfer_guard
+# ---------------------------------------------------------------------------
+
+
+def test_transfer_guard_arms_jax_guard():
+    # CPU d2h is zero-copy, so the raise path only fires on
+    # accelerators; what we can assert everywhere is that the block
+    # arms jax's device->host guard and restores it after
+    before = jax.config.jax_transfer_guard_device_to_host
+    with transfer_guard(active=True):
+        assert jax.config.jax_transfer_guard_device_to_host == "disallow"
+    assert jax.config.jax_transfer_guard_device_to_host == before
+
+
+def test_transfer_guard_inactive_is_noop():
+    with transfer_guard(active=False):
+        assert jax.config.jax_transfer_guard_device_to_host is None
+        np.asarray(jnp.arange(4))     # always fine when off
+
+
+def test_transfer_guard_follows_env(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    with transfer_guard():
+        assert jax.config.jax_transfer_guard_device_to_host is None
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    with transfer_guard():
+        assert jax.config.jax_transfer_guard_device_to_host == "disallow"
+
+
+# ---------------------------------------------------------------------------
+# lock-order recorder
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(autouse=True)
+def _fresh_monitor():
+    reset_lock_monitor()
+    yield
+    reset_lock_monitor()
+
+
+def test_instrument_lock_inactive_returns_plain_lock():
+    lock = instrument_lock("X", active=False)
+    assert isinstance(lock, type(threading.Lock()))
+    cond = instrument_condition("Y", active=False)
+    assert isinstance(cond, threading.Condition)
+
+
+def test_consistent_order_records_no_violation():
+    a = instrument_lock("A", active=True)
+    b = instrument_lock("B", active=True)
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert lock_violations() == []
+
+
+def test_inverted_order_is_reported():
+    a = instrument_lock("A", active=True)
+    b = instrument_lock("B", active=True)
+    with a:
+        with b:
+            pass
+    with b:
+        with a:
+            pass
+    vs = lock_violations()
+    assert len(vs) == 1
+    v = vs[0]
+    assert v.kind == "order" and {v.first, v.second} == {"A", "B"}
+    assert v.site       # file:line of the second acquisition
+
+
+def test_cross_thread_inversion_is_reported():
+    # the registry is process-wide: thread 1 takes A->B, thread 2 B->A
+    a = instrument_lock("A", active=True)
+    b = instrument_lock("B", active=True)
+
+    def order(first, second):
+        with first:
+            with second:
+                pass
+
+    t1 = threading.Thread(target=order, args=(a, b))
+    t1.start(); t1.join()
+    t2 = threading.Thread(target=order, args=(b, a))
+    t2.start(); t2.join()
+    assert [v.kind for v in lock_violations()] == ["order"]
+
+
+def test_require_held_records_unguarded_access():
+    a = instrument_lock("A", active=True)
+    with a:
+        require_held(a)
+    assert lock_violations() == []
+    require_held(a, site="here")
+    vs = lock_violations()
+    assert [v.kind for v in vs] == ["unguarded"]
+    assert vs[0].first == "A" and vs[0].site == "here"
+
+
+def test_require_held_noop_for_plain_locks():
+    require_held(threading.Lock())
+    assert lock_violations() == []
+
+
+def test_condition_wrapper_wait_notify():
+    cond = instrument_condition("C", active=True)
+    hits = []
+
+    def waiter():
+        with cond:
+            cond.wait_for(lambda: bool(hits), timeout=5.0)
+            hits.append("woke")
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    with cond:
+        hits.append("go")
+        cond.notify_all()
+    t.join(timeout=5.0)
+    assert hits == ["go", "woke"]
+    assert lock_violations() == []
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: staged serve with the sanitizers armed
+# ---------------------------------------------------------------------------
+
+
+def test_staged_engine_serves_clean_under_sanitize(monkeypatch):
+    """REPRO_SANITIZE=1 end-to-end: the multi-PU staged engine builds
+    with instrumented locks, serves mixed traffic with the decode block
+    under the transfer guard, and the lock monitor records nothing."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize.enabled()
+    reset_lock_monitor()
+
+    from repro.configs import get_config, smoke_variant
+    from repro.core.pu import host_offload_config, tpu_v5e_config
+    from repro.models import api as model_api
+    from repro.runtime.serving import ServeConfig, ServingEngine
+
+    cfg = smoke_variant(get_config("olmo-1b"))
+    api = model_api.get_api(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(
+        cfg, params,
+        ServeConfig(
+            max_batch=2, max_len=64, max_new_tokens=4, seed=0,
+            stream_pus=[host_offload_config(), tpu_v5e_config()],
+            stage_decode=True, decode_microbatches=2,
+        ),
+    )
+    rng = np.random.default_rng(0)
+    for n in (5, 9):
+        eng.submit(rng.integers(0, cfg.vocab, n).astype(np.int32))
+    done = eng.run_until_drained()
+    assert len(done) == 2
+    assert all(len(r.out_tokens) > 0 for r in done)
+    assert lock_violations() == []
+    assert eng.trace_counts is eng.tracing.counts   # live alias
